@@ -1,0 +1,20 @@
+"""Paper §3.1: the hierarchical search's first stage — autotuner entries
+(work/cycle per candidate config) for each kernel, like Triton's autotuner
+table that precedes SASS optimization."""
+
+from repro.kernels import KERNELS
+from repro.sched import autotune
+from benchmarks.common import emit
+
+
+def run():
+    rows = []
+    for name, kdef in KERNELS.items():
+        res = autotune(kdef.make_spec, kdef.configs)
+        for e in res.entries:
+            rows.append(("autotune", name, str(e.config).replace(",", ";"),
+                         round(e.cycles, 0), round(e.work_per_cycle, 1),
+                         "best" if e is res.best else ""))
+    emit(rows, header=("bench", "kernel", "config", "cycles",
+                       "work_per_cycle", "selected"))
+    return rows

@@ -1,0 +1,36 @@
+"""Paper Fig. 6: normalized kernel throughput.  The -O3 list schedule is the
+Triton-baseline analogue (normalized to 1.0); 'naive' is the unscheduled
+dataflow order; CuAsmRL is the RL-optimized schedule from the artifact
+cache (results/agents_summary.json, produced by the offline search)."""
+
+from repro.core import Machine
+from repro.kernels import KERNELS
+from repro.sched import lower, naive_schedule, schedule
+from benchmarks.common import emit, load_agents_summary
+
+
+def run():
+    summary = load_agents_summary()
+    m = Machine()
+    rows = []
+    geo = 1.0
+    n = 0
+    for name, kdef in KERNELS.items():
+        cfg = (summary.get(name, {}).get("config")
+               or kdef.configs[0])
+        lk = lower(kdef.make_spec(cfg))
+        o3 = m.run(schedule(lk)).cycles
+        nv = m.run(naive_schedule(lk)).cycles
+        if name in summary:
+            opt = summary[name]["optimized_cycles"]
+        else:
+            opt = o3  # agents not trained yet: report baseline
+        rows.append(("fig6", name, round(o3 / nv, 3), 1.0,
+                     round(o3 / opt, 4), round(o3, 0), round(opt, 0)))
+        geo *= o3 / opt
+        n += 1
+    rows.append(("fig6", "geomean", "", 1.0, round(geo ** (1 / max(n, 1)), 4),
+                 "", ""))
+    emit(rows, header=("bench", "kernel", "naive_norm", "baseline_norm",
+                       "cuasmrl_norm", "baseline_cycles", "cuasmrl_cycles"))
+    return rows

@@ -1,0 +1,39 @@
+"""Paper §5.7: automatic discovery of optimization moves.  Trains a small
+agent, replays it deterministically in inference mode, and reports the
+top-gain reorderings with their move classes (reuse-cache interleave /
+predicated-slot hoist / DMA latency hiding) and the lingering fraction."""
+
+from repro.core import build_stall_table
+from repro.core.game import run_inference, train_on_program
+from repro.core.moves import lingering_fraction, top_moves
+from repro.core.ppo import PPOConfig
+from repro.kernels import KERNELS
+from repro.sched import lower, schedule
+from benchmarks.common import emit
+
+
+def run(budget: int = 6144):
+    db = build_stall_table()
+    rows = []
+    for name in ("matmul_leakyrelu", "bmm"):   # the two kernels of §5.7
+        kdef = KERNELS[name]
+        prog = schedule(lower(kdef.make_spec(kdef.configs[0])))
+        cfg = PPOConfig(total_timesteps=budget, num_envs=8, num_steps=64,
+                        episode_length=64, seed=0)
+        res = train_on_program(prog, stall_db=db, cfg=cfg)
+        env = run_inference(prog, res.params, stall_db=db,
+                            episode_length=64)
+        moves = top_moves(env, k=3)
+        for mv in moves:
+            rows.append(("sec57", name, mv.step, mv.record.moved.opcode,
+                         "up" if mv.record.direction == 0 else "down",
+                         round(mv.gain_pct, 3), mv.kind))
+        rows.append(("sec57", name, "lingering", "", "",
+                     round(lingering_fraction(env), 3), "§5.7.2 indicator"))
+        print(f"# {name}: inference best {env.best_cycles:.0f} "
+              f"(baseline {env.t0:.0f})")
+        for mv in moves[:2]:
+            print("\n".join("# " + l for l in mv.render().splitlines()))
+    emit(rows, header=("bench", "kernel", "step", "opcode", "dir",
+                       "gain_pct_T0", "class"))
+    return rows

@@ -1,0 +1,39 @@
+"""Paper Fig. 8 / §5.5: PPO hyperparameter sensitivity — learning rate and
+batch-size sweeps around the default setting, final episodic returns.
+Budgets are kept small (single-core container); the qualitative claim under
+test is robustness of the default configuration."""
+
+from repro.core import build_stall_table
+from repro.core.game import train_on_program
+from repro.core.ppo import PPOConfig
+from repro.kernels import KERNELS
+from repro.sched import lower, schedule
+from benchmarks.common import emit
+
+SETTINGS = [
+    ("default", dict(lr=2.5e-4, num_steps=64)),
+    ("lr_hi", dict(lr=1e-3, num_steps=64)),
+    ("lr_lo", dict(lr=5e-5, num_steps=64)),
+    ("batch_small", dict(lr=2.5e-4, num_steps=32)),
+]
+
+
+def run(budget: int = 4096):
+    db = build_stall_table()
+    kdef = KERNELS["matmul_leakyrelu"]   # the paper sweeps fused GEMM+epilogue
+    prog = schedule(lower(kdef.make_spec(kdef.configs[0])))
+    rows = []
+    for label, kw in SETTINGS:
+        cfg = PPOConfig(total_timesteps=budget, num_envs=8,
+                        episode_length=64, seed=0, **kw)
+        res = train_on_program(prog, stall_db=db, cfg=cfg)
+        returns = [r["episodic_return"] for r in res.stats]
+        rows.append(("fig8", label, kw["lr"], kw["num_steps"] * 8,
+                     round(returns[0], 3), round(returns[-1], 3),
+                     round(res.improvement, 4),
+                     round(res.stats[-1]["entropy"], 3),
+                     round(res.stats[-1]["approx_kl"], 5)))
+    emit(rows, header=("bench", "setting", "lr", "batch", "first_return",
+                       "final_return", "improvement", "final_entropy",
+                       "final_kl"))
+    return rows

@@ -1,0 +1,30 @@
+"""Framework §Roofline table: reads results/dryrun.json (produced by
+``python -m repro.launch.dryrun --arch all --mesh both --out
+results/dryrun.json``) and prints the three roofline terms per cell."""
+
+from benchmarks.common import emit, load_dryrun
+
+
+def run():
+    cells = load_dryrun()
+    rows = []
+    for c in cells:
+        if c.get("status") == "ok":
+            r = c["roofline"]
+            rows.append(("roofline", c["arch"], c["shape"], c["mesh"],
+                         f"{r['compute_s']:.4g}", f"{r['memory_s']:.4g}",
+                         f"{r['collective_s']:.4g}", r["dominant"],
+                         f"{(r['useful_ratio'] or 0):.3f}"))
+        elif c.get("status") == "skip":
+            rows.append(("roofline", c["arch"], c["shape"], c["mesh"],
+                         "skip", "", "", "", ""))
+        else:
+            rows.append(("roofline", c["arch"], c["shape"], c["mesh"],
+                         "FAIL", "", "", "", ""))
+    if not rows:
+        rows.append(("roofline", "(run repro.launch.dryrun first)", "", "",
+                     "", "", "", "", ""))
+    emit(rows, header=("bench", "arch", "shape", "mesh", "compute_s",
+                       "memory_s", "collective_s", "dominant",
+                       "model/hlo_flops"))
+    return rows

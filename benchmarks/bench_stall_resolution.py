@@ -1,0 +1,25 @@
+"""Paper Fig. 7: fraction of stall-count dependencies resolved by the
+microbenchmarked table (db), inferred by the analysis pass, or denylisted."""
+
+from repro.core import analyze, build_stall_table
+from repro.kernels import KERNELS
+from repro.sched import lower, schedule
+from benchmarks.common import emit
+
+
+def run():
+    db = build_stall_table()
+    rows = []
+    tot = {"db": 0.0, "infer": 0.0, "denylist": 0.0}
+    for name, kdef in KERNELS.items():
+        prog = schedule(lower(kdef.make_spec(kdef.configs[0])))
+        fr = analyze(prog, db).resolution_fractions()
+        rows.append(("fig7", name, round(fr["db"], 3), round(fr["infer"], 3),
+                     round(fr["denylist"], 3)))
+        for k in tot:
+            tot[k] += fr[k]
+    n = len(KERNELS)
+    rows.append(("fig7", "average", round(tot["db"] / n, 3),
+                 round(tot["infer"] / n, 3), round(tot["denylist"] / n, 3)))
+    emit(rows, header=("bench", "kernel", "db", "infer", "denylist"))
+    return rows

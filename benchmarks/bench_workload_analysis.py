@@ -1,0 +1,36 @@
+"""Paper Table 3: compute/memory workload analysis of the optimized vs
+baseline schedule (machine counters standing in for Nsight Compute)."""
+
+from repro.core import Machine
+from repro.kernels import KERNELS
+from repro.sched import cache as sched_cache
+from repro.sched import lower, schedule
+from repro.sched.api import TARGET
+from benchmarks.common import emit, load_agents_summary
+
+
+def run():
+    summary = load_agents_summary()
+    m = Machine()
+    rows = []
+    for name in ("matmul_leakyrelu", "bmm", "rmsnorm"):
+        kdef = KERNELS[name]
+        cfg = summary.get(name, {}).get("config") or kdef.configs[0]
+        base = schedule(lower(kdef.make_spec(cfg)))
+        art = sched_cache.load(name, TARGET, cfg)
+        progs = {"baseline": base}
+        if art is not None:
+            progs["cuasmrl"] = art.program
+        for label, prog in progs.items():
+            c = m.run(prog).counters
+            rows.append(("table3", name, label,
+                         round(c["ipc"], 4),
+                         round(c["dma_busy_in_frac"], 4),
+                         round(c["dma_busy_out_frac"], 4),
+                         round(c["bw_in_Bpc"] + c["bw_out_Bpc"], 3),
+                         int(c["mxm_reuse_hits"]),
+                         round(c["stall_sem"], 0)))
+    emit(rows, header=("bench", "kernel", "schedule", "ipc",
+                       "dma_in_busy", "dma_out_busy", "mem_Bpc",
+                       "reuse_hits", "sem_stall_cycles"))
+    return rows

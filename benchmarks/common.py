@@ -1,0 +1,33 @@
+"""Shared helpers for the benchmark suite."""
+
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+CACHE_DIR = os.path.join(os.path.dirname(RESULTS_DIR), ".repro_cache")
+
+
+def load_agents_summary():
+    path = os.path.join(RESULTS_DIR, "agents_summary.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def load_dryrun():
+    path = os.path.join(RESULTS_DIR, "dryrun.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return []
+
+
+def emit(rows, header=None):
+    """Print rows as CSV (the harness contract: name,value,derived)."""
+    if header:
+        print(",".join(header))
+    for row in rows:
+        print(",".join(str(v) for v in row))
+    return rows

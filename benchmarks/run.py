@@ -1,0 +1,47 @@
+"""Benchmark aggregator: one module per paper table/figure (DESIGN.md §6).
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the RL-training benches (fig8 / §5.7)")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_autotune, bench_kernel_throughput,
+                            bench_microbench, bench_moves, bench_rl_sensitivity,
+                            bench_roofline, bench_stall_resolution,
+                            bench_workload_analysis)
+
+    suites = [
+        ("table1_microbench", bench_microbench.run),
+        ("fig7_stall_resolution", bench_stall_resolution.run),
+        ("autotune", bench_autotune.run),
+        ("fig6_kernel_throughput", bench_kernel_throughput.run),
+        ("table3_workload", bench_workload_analysis.run),
+        ("roofline", bench_roofline.run),
+    ]
+    if not args.fast:
+        suites += [
+            ("fig8_rl_sensitivity", bench_rl_sensitivity.run),
+            ("sec57_moves", bench_moves.run),
+        ]
+
+    for name, fn in suites:
+        print(f"\n==== {name} ====", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # keep the suite running; a bench failure
+            print(f"BENCH-FAIL,{name},{type(e).__name__}: {e}")
+        print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Optimize any registered Pallas kernel's TSASS schedule and trace the
+discovered moves (paper §5.7).
+
+    PYTHONPATH=src python examples/optimize_kernel.py --kernel fused_ff \
+        --timesteps 8192
+"""
+
+import argparse
+
+from repro.core import build_stall_table
+from repro.core.game import run_inference, train_on_program
+from repro.core.moves import lingering_fraction, top_moves
+from repro.core.ppo import PPOConfig
+from repro.kernels import KERNELS
+from repro.sched import lower, schedule
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernel", default="fused_ff", choices=list(KERNELS))
+    ap.add_argument("--timesteps", type=int, default=8192)
+    ap.add_argument("--episode-length", type=int, default=96)
+    args = ap.parse_args()
+
+    db = build_stall_table()
+    kdef = KERNELS[args.kernel]
+    o3 = schedule(lower(kdef.make_spec(kdef.configs[0])))
+    cfg = PPOConfig(total_timesteps=args.timesteps, num_envs=8,
+                    num_steps=128, episode_length=args.episode_length)
+    res = train_on_program(o3, stall_db=db, cfg=cfg, verbose=True)
+    print(f"\nbaseline {res.baseline_cycles:.0f} -> best "
+          f"{res.best_cycles:.0f} ({res.improvement:+.2%})")
+
+    env = run_inference(o3, res.params, stall_db=db,
+                        episode_length=args.episode_length)
+    print(f"inference episode best: {env.best_cycles:.0f}; "
+          f"lingering fraction {lingering_fraction(env):.2f}")
+    for mv in top_moves(env, k=3):
+        print()
+        print(mv.render())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""CuAsmRL core: the paper's contribution as a composable library.
+
+Pipeline: parse/lower a TSASS program -> static analysis (§3.2) ->
+assembly game env (§3.3–3.6) -> PPO (§3.7) -> optimized schedule + trace.
+"""
+
+from repro.core.analysis import Analysis, analyze
+from repro.core.env import AssemblyGame, can_swap
+from repro.core.game import GameResult, run_inference, train_on_program
+from repro.core.isa import Control, Instruction, program_text
+from repro.core.machine import Machine, dataflow_reference
+from repro.core.microbench import build_stall_table, clock_based_estimate
+from repro.core.parser import parse_line, parse_program
+from repro.core.ppo import PPOConfig
+
+__all__ = [
+    "Analysis", "analyze", "AssemblyGame", "can_swap", "GameResult",
+    "run_inference", "train_on_program", "Control", "Instruction",
+    "program_text", "Machine", "dataflow_reference", "build_stall_table",
+    "clock_based_estimate", "parse_line", "parse_program", "PPOConfig",
+]

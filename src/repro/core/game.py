@@ -1,0 +1,189 @@
+"""Assembly-game training driver (paper Fig. 3 loop + §4.2 workflow).
+
+``train_on_program`` runs PPO over vectorized copies of the game for one
+kernel schedule and returns the best schedule found across the whole run —
+"the best optimized cubin found throughout the assembly game is written to
+the file system" (§4.2).  Training statistics (episodic return, approximate
+KL divergence, policy entropy — the paper's Fig. 8 / Fig. 12 time series) are
+collected per update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.env import AssemblyGame
+from repro.core.isa import Instruction
+from repro.core.machine import Machine
+from repro.core.ppo import (PPOConfig, compute_gae, greedy_action, init_agent,
+                            make_update_fn, policy_value, sample_action)
+
+
+@dataclasses.dataclass
+class GameResult:
+    best_program: List[Instruction]
+    best_cycles: float
+    baseline_cycles: float
+    params: Dict
+    stats: List[Dict]
+    config: PPOConfig
+
+    @property
+    def improvement(self) -> float:
+        return (self.baseline_cycles - self.best_cycles) / self.baseline_cycles
+
+    @property
+    def speedup(self) -> float:
+        return self.baseline_cycles / self.best_cycles
+
+
+def _batch_obs(obs_list):
+    return (np.stack([o["state"] for o in obs_list]),
+            np.stack([o["mask"] for o in obs_list]))
+
+
+def train_on_program(program: Sequence[Instruction],
+                     stall_db: Optional[Dict[str, int]] = None,
+                     cfg: Optional[PPOConfig] = None,
+                     machine_factory: Callable[[], Machine] = Machine,
+                     log_every: int = 1,
+                     verbose: bool = False) -> GameResult:
+    cfg = cfg or PPOConfig()
+    envs = [AssemblyGame(program, stall_db=stall_db,
+                         machine=machine_factory(), input_seed=i,
+                         episode_length=cfg.episode_length,
+                         warm_start=cfg.warm_start,
+                         hop_sizes=cfg.hop_sizes)
+            for i in range(cfg.num_envs)]
+    n_rows, feat_dim = envs[0].n, envs[0].feature_dim
+    num_actions = max(envs[0].num_actions, 2)
+
+    key = jax.random.PRNGKey(cfg.seed)
+    key, ik = jax.random.split(key)
+    params = init_agent(ik, n_rows, feat_dim, num_actions)
+    opt, update_fn = make_update_fn(cfg)
+    opt_state = opt.init(params)
+
+    obs_list = [env.reset() for env in envs]
+    ep_returns = [0.0] * cfg.num_envs
+    finished_returns: List[float] = []
+    stats: List[Dict] = []
+    global_step = 0
+
+    for update in range(cfg.num_updates):
+        T, B = cfg.num_steps, cfg.num_envs
+        buf_state = np.zeros((T, B, n_rows, feat_dim), np.float32)
+        buf_mask = np.zeros((T, B, num_actions), np.float32)
+        buf_action = np.zeros((T, B), np.int32)
+        buf_logprob = np.zeros((T, B), np.float32)
+        buf_reward = np.zeros((T, B), np.float32)
+        buf_done = np.zeros((T, B), np.float32)
+        buf_value = np.zeros((T, B), np.float32)
+
+        for t in range(T):
+            state, mask = _batch_obs(obs_list)
+            if mask.shape[1] < num_actions:  # degenerate tiny action spaces
+                mask = np.pad(mask, ((0, 0), (0, num_actions - mask.shape[1])))
+            key, sk = jax.random.split(key)
+            action, logprob, value = sample_action(params, sk, state, mask)
+            action = np.asarray(action)
+            buf_state[t], buf_mask[t] = state, mask
+            buf_action[t] = action
+            buf_logprob[t] = np.asarray(logprob)
+            buf_value[t] = np.asarray(value)
+            for b, env in enumerate(envs):
+                env_mask = mask[b, :env.num_actions]
+                if env_mask.sum() == 0:
+                    obs, reward, done = env.reset(), 0.0, True
+                else:
+                    a = int(action[b])
+                    if a >= env.num_actions or env_mask[a] == 0:
+                        a = int(np.argmax(env_mask))  # defensive fallback
+                    obs, reward, done, _ = env.step(a)
+                ep_returns[b] += reward
+                buf_reward[t, b] = reward
+                buf_done[t, b] = float(done)
+                if done:
+                    finished_returns.append(ep_returns[b])
+                    ep_returns[b] = 0.0
+                    obs = env.reset()
+                obs_list[b] = obs
+            global_step += B
+
+        state, mask = _batch_obs(obs_list)
+        if mask.shape[1] < num_actions:
+            mask = np.pad(mask, ((0, 0), (0, num_actions - mask.shape[1])))
+        _, last_value = jax.jit(policy_value)(params, state)
+        adv, ret = compute_gae(buf_reward, buf_value, buf_done,
+                               np.asarray(last_value),
+                               cfg.gamma, cfg.gae_lambda)
+        batch = {
+            "state": buf_state.reshape(T * B, n_rows, feat_dim),
+            "mask": buf_mask.reshape(T * B, num_actions),
+            "action": buf_action.reshape(T * B),
+            "logprob": buf_logprob.reshape(T * B),
+            "adv": np.asarray(adv).reshape(T * B),
+            "ret": np.asarray(ret).reshape(T * B),
+            "value": buf_value.reshape(T * B),
+        }
+        key, uk = jax.random.split(key)
+        params, opt_state, ustats = update_fn(params, opt_state, batch, uk)
+
+        if update % log_every == 0:
+            recent = finished_returns[-10 * cfg.num_envs:]
+            row = {
+                "update": update,
+                "global_step": global_step,
+                "episodic_return": float(np.mean(recent)) if recent else 0.0,
+                "approx_kl": float(ustats.approx_kl),
+                "entropy": float(ustats.entropy),
+                "policy_loss": float(ustats.policy_loss),
+                "value_loss": float(ustats.value_loss),
+                "clip_frac": float(ustats.clip_frac),
+                "best_cycles": min(env.best_cycles for env in envs),
+                "time": time.time(),
+            }
+            stats.append(row)
+            if verbose:
+                print(f"[game] upd={update} step={global_step} "
+                      f"ret={row['episodic_return']:.3f} "
+                      f"kl={row['approx_kl']:.4f} ent={row['entropy']:.3f} "
+                      f"best={row['best_cycles']:.0f}")
+
+    best_env = min(envs, key=lambda e: e.best_cycles)
+    return GameResult(
+        best_program=[ins.copy() for ins in best_env.best_program],
+        best_cycles=best_env.best_cycles,
+        baseline_cycles=envs[0].t0,
+        params=params,
+        stats=stats,
+        config=cfg,
+    )
+
+
+def run_inference(program: Sequence[Instruction], params: Dict,
+                  stall_db: Optional[Dict[str, int]] = None,
+                  episode_length: int = 32,
+                  machine: Optional[Machine] = None) -> AssemblyGame:
+    """Deterministic (greedy, seedable) inference replay — the paper's §5.7
+    mode for tracing the discovered optimization moves."""
+    env = AssemblyGame(program, stall_db=stall_db, machine=machine,
+                       episode_length=episode_length)
+    obs = env.reset()
+    for _ in range(episode_length):
+        mask = obs["mask"]
+        if mask.sum() == 0:
+            break
+        action, _ = greedy_action(params, obs["state"][None], mask[None])
+        a = int(np.asarray(action)[0])
+        if mask[a] == 0:
+            a = int(np.argmax(mask))
+        obs, _, done, _ = env.step(a)
+        if done:
+            break
+    return env

@@ -1,0 +1,248 @@
+"""PPO with a CNN state encoder and invalid-action masking (paper §3.7).
+
+Pure-JAX actor-critic (no external RL libraries): the state matrix from
+:mod:`repro.core.embedding` is encoded by a 1-D CNN over the instruction
+axis, followed by MLP actor/critic heads.  Hyperparameters and implementation
+choices (orthogonal init, Adam eps 1e-5, advantage normalization, clipped
+value loss, linear LR anneal) follow the "37 implementation details of PPO"
+study the paper takes its defaults from [11].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adam
+from repro.optim.adamw import apply_updates
+
+_NEG = -1e9
+
+
+@dataclasses.dataclass
+class PPOConfig:
+    # defaults from Huang et al. [11] as used by the paper (§3.7, §5.5)
+    lr: float = 2.5e-4
+    num_envs: int = 8
+    num_steps: int = 128            # rollout length per env per update
+    total_timesteps: int = 16_384
+    gamma: float = 0.99
+    gae_lambda: float = 0.95
+    num_minibatches: int = 4
+    update_epochs: int = 4
+    clip_coef: float = 0.2
+    ent_coef: float = 0.01
+    vf_coef: float = 0.5
+    max_grad_norm: float = 0.5
+    anneal_lr: bool = True
+    seed: int = 0
+    episode_length: int = 32    # §5.7.2: increase if no lingering observed
+    warm_start: bool = False    # beyond-paper: episodes resume from the
+                                # incumbent best schedule (see §Perf)
+    hop_sizes: tuple = (1,)     # beyond-paper: macro moves (see §Perf)
+
+    @property
+    def batch_size(self) -> int:
+        return self.num_envs * self.num_steps
+
+    @property
+    def minibatch_size(self) -> int:
+        return self.batch_size // self.num_minibatches
+
+    @property
+    def num_updates(self) -> int:
+        return max(1, self.total_timesteps // self.batch_size)
+
+
+# ---------------------------------------------------------------------------
+# network
+# ---------------------------------------------------------------------------
+
+def _orthogonal(key, shape, gain=1.0, dtype=jnp.float32):
+    flat = (int(np.prod(shape[:-1])), shape[-1])
+    a = jax.random.normal(key, flat, dtype)
+    q, r = jnp.linalg.qr(a if flat[0] >= flat[1] else a.T)
+    q = q * jnp.sign(jnp.diagonal(r))
+    if flat[0] < flat[1]:
+        q = q.T
+    return (gain * q[: flat[0], : flat[1]]).reshape(shape).astype(dtype)
+
+
+def init_agent(key, n_rows: int, feat_dim: int, num_actions: int,
+               channels: int = 64, hidden: int = 256) -> Dict:
+    ks = jax.random.split(key, 6)
+    s2 = float(np.sqrt(2.0))
+    return {
+        "conv1_w": _orthogonal(ks[0], (5, feat_dim, channels), s2),
+        "conv1_b": jnp.zeros((channels,)),
+        "conv2_w": _orthogonal(ks[1], (5, channels, channels), s2),
+        "conv2_b": jnp.zeros((channels,)),
+        "fc_w": _orthogonal(ks[2], (2 * channels, hidden), s2),
+        "fc_b": jnp.zeros((hidden,)),
+        "actor_w": _orthogonal(ks[3], (hidden, num_actions), 0.01),
+        "actor_b": jnp.zeros((num_actions,)),
+        "critic_w": _orthogonal(ks[4], (hidden, 1), 1.0),
+        "critic_b": jnp.zeros((1,)),
+    }
+
+
+def _conv1d(x, w, b, stride):
+    """1-D conv as im2col + GEMM.  (lax.conv's strided backward lowers to a
+    dilated conv, which is pathologically slow on the XLA CPU backend this
+    container trains on; gather+matmul keeps fwd/bwd on the GEMM fast path
+    and is mathematically identical.)  x: (B, N, C_in); w: (K, C_in, C_out).
+    """
+    B, N, _ = x.shape
+    K = w.shape[0]
+    pad_lo = (K - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (pad_lo, K - 1 - pad_lo), (0, 0)))
+    n_out = -(-N // stride)  # ceil: SAME padding
+    idx = jnp.arange(n_out) * stride
+    cols = xp[:, idx[:, None] + jnp.arange(K)[None, :], :]  # (B, No, K, C)
+    return jnp.einsum("bnkc,kco->bno", cols, w) + b
+
+
+def policy_value(params, state):
+    """state: (B, N, F) -> (logits (B, A), value (B,))."""
+    x = _conv1d(state, params["conv1_w"], params["conv1_b"], 2)
+    x = jax.nn.relu(x)
+    x = _conv1d(x, params["conv2_w"], params["conv2_b"], 2)
+    x = jax.nn.relu(x)
+    feat = jnp.concatenate([x.mean(axis=1), x.max(axis=1)], axis=-1)
+    h = jax.nn.relu(feat @ params["fc_w"] + params["fc_b"])
+    logits = h @ params["actor_w"] + params["actor_b"]
+    value = (h @ params["critic_w"] + params["critic_b"])[..., 0]
+    return logits, value
+
+
+def masked_logits(logits, mask):
+    return jnp.where(mask > 0, logits, _NEG)
+
+
+def masked_log_probs(logits, mask):
+    ml = masked_logits(logits, mask)
+    return jax.nn.log_softmax(ml, axis=-1)
+
+
+def masked_entropy(logits, mask):
+    lp = masked_log_probs(logits, mask)
+    p = jnp.exp(lp)
+    ent = -jnp.sum(jnp.where(mask > 0, p * lp, 0.0), axis=-1)
+    return ent
+
+
+@jax.jit
+def sample_action(params, key, state, mask):
+    """Batched action sampling under the mask (assigning 'an impossible
+    probability' to invalid actions, §3.5)."""
+    logits, value = policy_value(params, state)
+    ml = masked_logits(logits, mask)
+    action = jax.random.categorical(key, ml, axis=-1)
+    lp = masked_log_probs(logits, mask)
+    logprob = jnp.take_along_axis(lp, action[:, None], axis=-1)[:, 0]
+    return action, logprob, value
+
+
+@jax.jit
+def greedy_action(params, state, mask):
+    logits, value = policy_value(params, state)
+    return jnp.argmax(masked_logits(logits, mask), axis=-1), value
+
+
+# ---------------------------------------------------------------------------
+# GAE + update
+# ---------------------------------------------------------------------------
+
+def compute_gae(rewards, values, dones, last_value, gamma, lam):
+    """rewards/values/dones: (T, B); returns advantages, returns (T, B)."""
+    T = rewards.shape[0]
+
+    def scan_fn(carry, xs):
+        adv_next, v_next = carry
+        r, v, d = xs
+        nonterminal = 1.0 - d
+        delta = r + gamma * v_next * nonterminal - v
+        adv = delta + gamma * lam * nonterminal * adv_next
+        return (adv, v), adv
+
+    init = (jnp.zeros_like(last_value), last_value)
+    _, advs = jax.lax.scan(scan_fn, init,
+                           (rewards, values, dones), reverse=True)
+    return advs, advs + values
+
+
+class UpdateStats(NamedTuple):
+    policy_loss: jnp.ndarray
+    value_loss: jnp.ndarray
+    entropy: jnp.ndarray
+    approx_kl: jnp.ndarray
+    clip_frac: jnp.ndarray
+
+
+def make_update_fn(cfg: PPOConfig):
+    opt = adam(lambda step: _lr_at(cfg, step), eps=1e-5,
+               max_grad_norm=cfg.max_grad_norm)
+
+    def loss_fn(params, mb):
+        logits, value = policy_value(params, mb["state"])
+        lp_all = masked_log_probs(logits, mb["mask"])
+        logprob = jnp.take_along_axis(lp_all, mb["action"][:, None], axis=-1)[:, 0]
+        ratio = jnp.exp(logprob - mb["logprob"])
+        adv = mb["adv"]
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+        pg1 = -adv * ratio
+        pg2 = -adv * jnp.clip(ratio, 1 - cfg.clip_coef, 1 + cfg.clip_coef)
+        pg_loss = jnp.maximum(pg1, pg2).mean()
+        # clipped value loss
+        v_clip = mb["value"] + jnp.clip(value - mb["value"],
+                                        -cfg.clip_coef, cfg.clip_coef)
+        v_loss = 0.5 * jnp.maximum((value - mb["ret"]) ** 2,
+                                   (v_clip - mb["ret"]) ** 2).mean()
+        ent = masked_entropy(logits, mb["mask"]).mean()
+        loss = pg_loss - cfg.ent_coef * ent + cfg.vf_coef * v_loss
+        approx_kl = ((ratio - 1.0) - jnp.log(ratio)).mean()
+        clip_frac = (jnp.abs(ratio - 1.0) > cfg.clip_coef).mean()
+        return loss, UpdateStats(pg_loss, v_loss, ent, approx_kl, clip_frac)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    @jax.jit
+    def update(params, opt_state, batch, key):
+        B = batch["action"].shape[0]
+
+        def epoch_body(carry, ek):
+            params, opt_state = carry
+            perm = jax.random.permutation(ek, B)
+
+            def mb_body(carry, idx):
+                params, opt_state = carry
+                mb = {k: v[idx] for k, v in batch.items()}
+                (_, stats), grads = grad_fn(params, mb)
+                updates, opt_state = opt.update(grads, opt_state, params)
+                params = apply_updates(params, updates)
+                return (params, opt_state), stats
+
+            idxs = perm.reshape(cfg.num_minibatches, cfg.minibatch_size)
+            (params, opt_state), stats = jax.lax.scan(
+                mb_body, (params, opt_state), idxs)
+            return (params, opt_state), stats
+
+        keys = jax.random.split(key, cfg.update_epochs)
+        (params, opt_state), stats = jax.lax.scan(
+            epoch_body, (params, opt_state), keys)
+        mean_stats = jax.tree.map(lambda x: x.mean(), stats)
+        return params, opt_state, mean_stats
+
+    return opt, update
+
+
+def _lr_at(cfg: PPOConfig, step):
+    if not cfg.anneal_lr:
+        return jnp.asarray(cfg.lr, jnp.float32)
+    total = cfg.num_updates * cfg.update_epochs * cfg.num_minibatches
+    frac = 1.0 - jnp.clip(step.astype(jnp.float32) / max(total, 1), 0.0, 1.0)
+    return cfg.lr * jnp.maximum(frac, 0.0) + 1e-8

@@ -1,0 +1,44 @@
+"""Pallas TPU kernels for the paper's evaluated kernel set (Table 2) plus
+the SSD chunk kernel for the assigned SSM architectures.
+
+Each module ships: the ``pl.pallas_call`` kernel with explicit BlockSpec
+VMEM tiling, a ``make_spec``/``CONFIGS`` pair for the schedule optimizer
+(autotune space, §3.1), and a pure-jnp oracle in :mod:`repro.kernels.ref`.
+``KERNELS`` is the registry the CuAsmRL integration consumes.
+"""
+
+from repro.kernels import ref
+from repro.sched.api import KernelDef
+
+
+def _build_registry():
+    from repro.kernels import (bmm, flash_attention, fused_ff,
+                               matmul_leakyrelu, rmsnorm, softmax, ssd)
+    return {
+        "matmul_leakyrelu": KernelDef(
+            "matmul_leakyrelu", matmul_leakyrelu.make_spec,
+            matmul_leakyrelu.CONFIGS, matmul_leakyrelu.matmul_leakyrelu,
+            ref.matmul_leakyrelu),
+        "fused_ff": KernelDef(
+            "fused_ff", fused_ff.make_spec, fused_ff.CONFIGS,
+            fused_ff.fused_ff, ref.fused_ff),
+        "bmm": KernelDef(
+            "bmm", bmm.make_spec, bmm.CONFIGS, bmm.bmm, ref.bmm),
+        "flash_attention": KernelDef(
+            "flash_attention", flash_attention.make_spec,
+            flash_attention.CONFIGS, flash_attention.flash_attention,
+            ref.flash_attention),
+        "softmax": KernelDef(
+            "softmax", softmax.make_spec, softmax.CONFIGS,
+            softmax.softmax, ref.softmax),
+        "rmsnorm": KernelDef(
+            "rmsnorm", rmsnorm.make_spec, rmsnorm.CONFIGS,
+            rmsnorm.rmsnorm, ref.rmsnorm),
+        "ssd": KernelDef(
+            "ssd", ssd.make_spec, ssd.CONFIGS, ssd.ssd, None),
+    }
+
+
+KERNELS = _build_registry()
+
+__all__ = ["KERNELS", "ref"]

@@ -1,0 +1,71 @@
+"""Root-mean-square layer normalization — Pallas TPU kernel (paper Table 2
+"rmsnorm", memory-bound class).  Row-block tiling; the gamma scale tile is
+loop-invariant (loaded once), which is what feeds the analysis-pass denylist
+in the TSASS lowering."""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.sched.spec import KernelSpec, TileIO
+
+
+def _kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * g_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, *, br: int = 8,
+            eps: float = 1e-6, interpret: bool = False) -> jax.Array:
+    rows, cols = x.shape
+    assert gamma.shape == (cols,) and rows % br == 0
+    g2 = gamma.reshape(1, cols)
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, cols), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        interpret=interpret,
+        name="rmsnorm",
+    )(x, g2)
+
+
+def make_spec(cfg: Dict) -> KernelSpec:
+    br, cols = cfg["br"], cfg["cols"]
+
+    def tile_fn(x, g):
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        return (x * jax.lax.rsqrt(var + 1e-6) * g,)
+
+    return KernelSpec(
+        name="rmsnorm",
+        tile_fn=tile_fn,
+        inputs=[TileIO("x", (br, cols)),
+                TileIO("g", (1, cols), invariant=True)],
+        outputs=[TileIO("y", (br, cols))],
+        steps=4,
+        accumulate=False,
+        config=dict(cfg),
+        flops_per_step=4 * br * cols,
+    )
+
+
+# paper configuration: rmsnorm on (1, 32, 4096, 64) -> rows=32*4096, cols=64;
+# practical LLM widths included in the sweep
+CONFIGS = [
+    {"br": 8, "cols": 2048},
+    {"br": 16, "cols": 2048},
+    {"br": 8, "cols": 4096},
+    {"br": 32, "cols": 1024},
+]

@@ -1,0 +1,63 @@
+"""Row softmax — Pallas TPU kernel (paper Table 2 "softmax", memory-bound
+class; paper configuration n_rows=512, n_cols=4096)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.sched.spec import KernelSpec, TileIO
+
+
+def _kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def softmax(x: jax.Array, *, br: int = 8,
+            interpret: bool = False) -> jax.Array:
+    rows, cols = x.shape
+    assert rows % br == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        interpret=interpret,
+        name="softmax",
+    )(x)
+
+
+def make_spec(cfg: Dict) -> KernelSpec:
+    br, cols = cfg["br"], cfg["cols"]
+
+    def tile_fn(x):
+        m = jnp.max(x, axis=-1, keepdims=True)
+        e = jnp.exp(x - m)
+        return (e / jnp.sum(e, axis=-1, keepdims=True),)
+
+    return KernelSpec(
+        name="softmax",
+        tile_fn=tile_fn,
+        inputs=[TileIO("x", (br, cols))],
+        outputs=[TileIO("y", (br, cols))],
+        steps=4,
+        accumulate=False,
+        config=dict(cfg),
+        flops_per_step=5 * br * cols,
+    )
+
+
+CONFIGS = [
+    {"br": 8, "cols": 4096},
+    {"br": 16, "cols": 4096},
+    {"br": 32, "cols": 2048},
+    {"br": 4, "cols": 8192},
+]

@@ -1,0 +1,2 @@
+# NOTE: launch.dryrun must be imported/run only in a fresh process (it pins
+# the XLA device count); import nothing here that touches jax device state.

@@ -1,0 +1,135 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes, proving the distribution config is coherent without
+hardware, and extracting the roofline terms from the compiled artifacts.
+
+MUST be run as its own process (the device-count flag above is read at
+first jax init; nothing may import jax before it):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-3b
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both \
+        --out results/dryrun.json
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCHS, get_config          # noqa: E402
+from repro.configs.base import SHAPES                # noqa: E402
+from repro.launch import jcost                       # noqa: E402
+from repro.launch import roofline as rl              # noqa: E402
+from repro.launch.mesh import make_production_mesh   # noqa: E402
+from repro.launch.specs import lowerable             # noqa: E402
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    seq, batch, kind = SHAPES[shape_name]
+    n_active = cfg.n_active_params()
+    if kind == "train":
+        return 6.0 * n_active * seq * batch
+    if kind == "prefill":
+        return 2.0 * n_active * seq * batch
+    return 2.0 * n_active * batch   # decode: one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             collect_hlo: bool = True, fused_attn: bool = False,
+             cfg_overrides: dict = None) -> dict:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    if shape_name not in cfg.supported_shapes:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skip", "reason": cfg.shape_skips.get(shape_name,
+                                                                "n/a")}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+    try:
+        fn, args = lowerable(cfg, shape_name, mesh)
+        with mesh:
+            lowered = jax.jit(fn).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            hlo = compiled.as_text() if collect_hlo else ""
+            analytic = jcost.cost_of(fn, *args,
+                                     fused_attn=fused_attn)
+            roof = rl.analyze(compiled, chips,
+                              model_flops=model_flops(cfg, shape_name),
+                              hlo_text=hlo, analytic=analytic)
+        return {
+            "arch": arch, "shape": shape_name,
+            "mesh": "multi" if multi_pod else "single",
+            "chips": chips, "status": "ok",
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "peak_bytes": int(getattr(mem, "temp_size_in_bytes", 0))
+                + int(getattr(mem, "argument_size_in_bytes", 0)),
+            },
+            "roofline": roof.as_dict(),
+        }
+    except Exception as e:  # a failing cell is a bug; record it loudly
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ARCHS} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {tuple(SHAPES)} or 'all'")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                r = run_cell(arch, shape_name, multi)
+                results.append(r)
+                tag = f"{arch:>22s} {shape_name:<12s} " \
+                      f"{'multi ' if multi else 'single'}"
+                if r["status"] == "ok":
+                    roof = r["roofline"]
+                    print(f"[dryrun] {tag} OK  compile={r['compile_s']:.0f}s "
+                          f"flops={roof['flops_global']:.3e} "
+                          f"coll={roof['coll_bytes_global']:.3e}B "
+                          f"dom={roof['dominant']}", flush=True)
+                elif r["status"] == "skip":
+                    print(f"[dryrun] {tag} SKIP ({r['reason']})", flush=True)
+                else:
+                    print(f"[dryrun] {tag} FAIL {r['error']}", flush=True)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[dryrun] wrote {args.out}")
+    n_fail = sum(1 for r in results if r["status"] == "FAIL")
+    print(f"[dryrun] {len(results)} cells, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

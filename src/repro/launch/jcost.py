@@ -1,0 +1,177 @@
+"""Trip-count-aware analytical cost model over jaxprs.
+
+XLA's ``compiled.cost_analysis()`` counts while/scan bodies ONCE regardless
+of trip count (verified empirically — see EXPERIMENTS.md §Roofline
+methodology), which under-counts scan-over-layers models by ~n_layers×.
+This walker computes exact FLOPs (and two byte estimates) from the closed
+jaxpr, where ``scan`` still carries its ``length``:
+
+  * flops        — 2·m·n·k per dot_general, 1/elem for elementwise/reduce,
+                   × trip counts through nested scans (remat recompute is
+                   explicit in the differentiated jaxpr, so it is counted);
+  * bytes_naive  — every eqn materializes operands + outputs (no fusion):
+                   upper bound on HBM traffic;
+  * bytes_fused  — only "materialization points" touch HBM (dot/conv
+                   operands+outputs, gathers/scatters, scan carries,
+                   parameters): models perfect elementwise fusion, i.e. the
+                   Pallas-kernel deployment path.  The truth lies between.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import numpy as np
+
+_HEAVY = {"dot_general", "conv_general_dilated", "gather", "scatter",
+          "scatter-add", "scatter_add", "dynamic_slice",
+          "dynamic_update_slice", "take", "take_along_axis"}
+_CALL = {"pjit", "closed_call", "custom_jvp_call", "custom_vjp_call",
+         "checkpoint", "remat2", "remat", "custom_vjp_call_jaxpr",
+         "shard_map", "smap"}
+_FREE = {"broadcast_in_dim", "reshape", "transpose", "squeeze",
+         "expand_dims", "convert_element_type", "copy", "stop_gradient",
+         "slice", "rev", "iota", "constant", "bitcast_convert_type",
+         "split", "concatenate"}
+
+
+def _nbytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0.0
+
+
+def _nelems(aval) -> float:
+    try:
+        return float(np.prod(aval.shape))
+    except Exception:
+        return 0.0
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes_naive: float = 0.0
+    bytes_fused: float = 0.0
+
+    def __add__(self, o):
+        return Cost(self.flops + o.flops, self.bytes_naive + o.bytes_naive,
+                    self.bytes_fused + o.bytes_fused)
+
+    def __mul__(self, k: float):
+        return Cost(self.flops * k, self.bytes_naive * k,
+                    self.bytes_fused * k)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"flops": self.flops, "bytes_naive": self.bytes_naive,
+                "bytes_fused": self.bytes_fused}
+
+
+def _dot_flops(eqn) -> float:
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    ((lc, rc), (lb, rb)) = eqn.params["dimension_numbers"]
+    batch = np.prod([a.shape[i] for i in lb]) if lb else 1.0
+    k = np.prod([a.shape[i] for i in lc]) if lc else 1.0
+    m = np.prod([d for i, d in enumerate(a.shape)
+                 if i not in set(lc) | set(lb)]) or 1.0
+    n = np.prod([d for i, d in enumerate(b.shape)
+                 if i not in set(rc) | set(rb)]) or 1.0
+    return 2.0 * float(batch) * float(m) * float(n) * float(k)
+
+
+def _eqn_io_bytes(eqn) -> float:
+    ins = sum(_nbytes(v.aval) for v in eqn.invars
+              if hasattr(v, "aval"))
+    outs = sum(_nbytes(v.aval) for v in eqn.outvars)
+    return ins + outs
+
+
+def _looks_like_flash_body(jaxpr) -> bool:
+    """Online-softmax attention chunk body: >=2 dot_generals + an exp."""
+    prims = [e.primitive.name for e in jaxpr.eqns]
+    return prims.count("dot_general") >= 2 and "exp" in prims
+
+
+def jaxpr_cost(jaxpr, fused_attn: bool = False) -> Cost:
+    total = Cost()
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "scan":
+            inner = eqn.params["jaxpr"].jaxpr
+            length = float(eqn.params["length"])
+            body = jaxpr_cost(inner, fused_attn)
+            if fused_attn and _looks_like_flash_body(inner):
+                # deploy the Pallas flash kernel for this loop: internals
+                # (scores, exp, running stats, the q-tile accumulators)
+                # stay in VMEM.  HBM traffic per iteration = the xs slices
+                # (K/V chunks); the carry is materialized once, not per
+                # iteration.
+                nc = int(eqn.params.get("num_consts", 0))
+                ncar = int(eqn.params.get("num_carry", 0))
+                slice_io = sum(_nbytes(v.aval)
+                               for v in inner.invars[nc + ncar:])
+                carry_io = sum(_nbytes(v.aval)
+                               for v in inner.invars[nc: nc + ncar])
+                body = Cost(body.flops, body.bytes_naive, slice_io)
+                total = total + body * length
+                total.bytes_fused += carry_io
+                continue
+            total = total + body * length
+            continue
+        if prim == "while":
+            # bounded while loops are rare here (gpipe fori): count body once
+            # per conservative default, plus note in methodology.
+            body = jaxpr_cost(eqn.params["body_jaxpr"].jaxpr, fused_attn)
+            total = total + body
+            continue
+        if prim == "cond":
+            branches = [jaxpr_cost(b.jaxpr, fused_attn)
+                        for b in eqn.params["branches"]]
+            worst = max(branches, key=lambda c: c.flops)
+            total = total + worst
+            continue
+        if prim in _CALL:
+            inner = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            if inner is None:
+                continue
+            total = total + jaxpr_cost(inner.jaxpr if hasattr(inner, "jaxpr")
+                                       else inner, fused_attn)
+            continue
+        if prim == "dot_general":
+            f = _dot_flops(eqn)
+            io = _eqn_io_bytes(eqn)
+            total.flops += f
+            total.bytes_naive += io
+            total.bytes_fused += io
+            continue
+        if prim in _FREE:
+            total.bytes_naive += sum(_nbytes(v.aval) for v in eqn.outvars)
+            continue
+        if prim in _HEAVY:
+            io = _eqn_io_bytes(eqn)
+            # gathers/dynamic slices move only the slice, not the operand:
+            # count output + indices, plus operand once for scatters
+            outs = sum(_nbytes(v.aval) for v in eqn.outvars)
+            total.bytes_naive += outs
+            total.bytes_fused += outs
+            continue
+        # elementwise / reductions / everything else
+        elems = max(sum(_nelems(v.aval) for v in eqn.outvars), 1.0)
+        total.flops += elems
+        total.bytes_naive += _eqn_io_bytes(eqn)
+    return total
+
+
+def cost_of(fn, *args, fused_attn: bool = False) -> Dict[str, float]:
+    """Analytical cost of ``fn(*args)`` (args may be ShapeDtypeStructs).
+    ``fused_attn=True`` models deploying the Pallas flash kernel for the
+    online-softmax chunk loops (bytes drop to loop-boundary IO)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    c = jaxpr_cost(closed.jaxpr, fused_attn)
+    # parameters/arguments are read at least once per step
+    arg_bytes = sum(_nbytes(v.aval) for v in closed.jaxpr.invars)
+    c.bytes_fused += arg_bytes
+    return c.as_dict()

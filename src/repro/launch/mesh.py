@@ -1,0 +1,26 @@
+"""Production mesh construction (DESIGN.md §5).
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (the dry-run pins the device count *before* any jax
+initialization)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """single-pod: (data=16, model=16) = 256 chips;
+    multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1, data: int = None, pipe: int = None):
+    """Small meshes over whatever devices exist (tests / CPU smoke)."""
+    n = len(jax.devices())
+    if pipe:
+        return jax.make_mesh((pipe,), ("pipe",))
+    data = data if data is not None else n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,147 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware constants (TPU v5e-class target, per the brief):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Per (arch × shape × mesh) cell:
+  compute term    = HLO_FLOPs / (chips × peak)
+  memory term     = HLO_bytes / (chips × hbm_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+cost_analysis() reports the *per-device partitioned* module, so global
+HLO_FLOPs/bytes = per-device × chips.  collective_bytes is not in
+cost_analysis: we parse the post-SPMD optimized HLO text and sum the result
+buffer sizes of every all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute (result size == operand size for all-reduce and
+permute; all-gather counts the gathered buffer it must move; documented in
+EXPERIMENTS.md §Roofline methodology).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[16,4096,128]{2,1,0} all-gather(
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+(" +
+    "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+_TUPLE_RE = re.compile(
+    r"=\s*\(\s*((?:[a-z0-9]+\[[0-9,]*\][^,)]*,?\s*)+)\)\s*(" +
+    "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved by each collective family + op counts."""
+    out = {c: 0.0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        hit = None
+        for c in _COLLECTIVES:
+            if f" {c}(" in stripped or f" {c}-start(" in stripped:
+                hit = c
+                break
+        if hit is None:
+            continue
+        if f"{hit}-done(" in stripped:
+            continue  # -done pairs with -start: count once
+        total = 0
+        m = _OP_RE.search(stripped)
+        if m:
+            total = _shape_bytes(m.group(1), m.group(2))
+        else:
+            mt = _TUPLE_RE.search(stripped)
+            if mt:
+                for dtype, dims in _SHAPE_RE.findall(mt.group(1)):
+                    total += _shape_bytes(dtype, dims)
+        out[hit] += total
+        counts[hit] += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    chips: int
+    flops_global: float
+    bytes_global: float
+    coll_bytes_global: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: Optional[float] = None
+    useful_ratio: Optional[float] = None
+    coll_breakdown: Optional[Dict] = None
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, chips: int, model_flops: Optional[float] = None,
+            hlo_text: Optional[str] = None,
+            analytic: Optional[Dict] = None) -> Roofline:
+    """``analytic`` (from launch.jcost) supplies trip-count-correct global
+    FLOPs/bytes; XLA's cost_analysis counts loop bodies once (verified) and
+    is recorded alongside for reference."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+
+    if analytic is not None:
+        flops_global = float(analytic["flops"])
+        bytes_global = float(analytic["bytes_fused"])
+        coll["xla_flops_global"] = flops_dev * chips
+        coll["xla_bytes_global"] = bytes_dev * chips
+        coll["bytes_naive_global"] = float(analytic["bytes_naive"])
+    else:
+        flops_global = flops_dev * chips
+        bytes_global = bytes_dev * chips
+    coll_global = coll["total"] * chips
+
+    compute_s = flops_global / (chips * PEAK_FLOPS)
+    memory_s = bytes_global / (chips * HBM_BW)
+    collective_s = coll_global / (chips * LINK_BW)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = (model_flops / flops_global) \
+        if (model_flops and flops_global) else None
+    return Roofline(chips=chips, flops_global=flops_global,
+                    bytes_global=bytes_global, coll_bytes_global=coll_global,
+                    compute_s=compute_s, memory_s=memory_s,
+                    collective_s=collective_s, dominant=dominant,
+                    model_flops=model_flops, useful_ratio=useful,
+                    coll_breakdown=coll)

@@ -1,0 +1,145 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+``lowerable(cfg, shape_name, mesh)`` returns (fn, args_sds) such that
+``jax.jit(fn, in_shardings=...).lower(*args_sds)`` is exactly the cell the
+dry-run and roofline analysis evaluate — no device allocation anywhere.
+
+Kinds:
+  train_4k     -> train_step(state, batch)
+  prefill_32k  -> prefill(params, inputs) -> logits
+  decode_32k / long_500k -> serve_step(params, caches, token, pos)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig
+from repro.dist import sharding as shd
+from repro.models import encdec, lm
+from repro.optim import adamw as adamw_fn, constant_schedule
+from repro.serve import decode as serve_decode
+from repro.train.step import TrainState, make_train_step
+
+
+def _sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _with_sharding(tree_sds, tree_sharding):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_sds, tree_sharding)
+
+
+def params_sds(cfg: ModelConfig, mesh) -> Tuple[Dict, Dict]:
+    """(ShapeDtypeStruct tree, NamedSharding tree) for the parameters."""
+    model = encdec if cfg.family == "encdec" else lm
+    sds = jax.eval_shape(functools.partial(model.init_model, cfg),
+                         jax.random.PRNGKey(0))
+    spec_tree = model.model_spec(cfg)
+    shardings = shd.param_shardings(spec_tree, mesh)
+    return _with_sharding(sds, shardings), shardings
+
+
+def _batch_sds(cfg: ModelConfig, mesh, seq: int, batch: int,
+               with_labels: bool = True) -> Dict:
+    bspec = shd.batch_spec(mesh, batch)
+    out = {"tokens": _sds((batch, seq), jnp.int32, mesh, bspec)}
+    if with_labels:
+        out["labels"] = _sds((batch, seq), jnp.int32, mesh, bspec)
+    if cfg.frontend == "audio_frames":
+        out["frames"] = _sds((batch, seq, cfg.d_model), jnp.bfloat16, mesh,
+                             shd.batch_spec(mesh, batch, ndim=3))
+    return out
+
+
+def _cache_shardings(cfg: ModelConfig, caches_sds, mesh):
+    b_ok = None
+
+    def leaf_spec(x) -> P:
+        shape = x.shape
+        dp = shd.dp_axes(mesh)
+        b_ax = dp if shape[0] % shd.dp_size(mesh) == 0 else None
+        if len(shape) == 4 and shape[2] == cfg.n_kv_heads \
+                and shape[3] == cfg.head_dim:
+            return shd.cache_sharding(mesh, shape[0], shape[1],
+                                      cfg.n_kv_heads)
+        if len(shape) == 4:  # ssm state (B, H, P, N)
+            h_ax = "model" if shape[1] % shd.model_size(mesh) == 0 else None
+            return P(b_ax, h_ax, None, None)
+        if len(shape) == 3:  # mla latent (B, S, R) / ssm conv (B, W, C)
+            # shard the sequence, NOT the latent dim: the attention einsums
+            # contract over R, and a contraction-dim sharding makes the SPMD
+            # partitioner all-gather the whole (f32-upcast) cache every
+            # layer — measured at 16.8 GB/device/step on deepseek decode_32k
+            # before this rule (EXPERIMENTS.md §Perf cell B).
+            if shape[1] % shd.model_size(mesh) == 0 \
+                    and shape[1] >= shd.model_size(mesh):
+                return P(b_ax, "model", None)
+            last_ax = "model" if shape[2] % shd.model_size(mesh) == 0 \
+                and shape[2] >= shd.model_size(mesh) else None
+            return P(b_ax, None, last_ax)
+        return P(*([None] * len(shape)))
+
+    return jax.tree.map(lambda x: NamedSharding(mesh, leaf_spec(x)),
+                        caches_sds)
+
+
+def lowerable(cfg: ModelConfig, shape_name: str, mesh):
+    """-> (fn, args_sds tuple).  ``jax.jit(fn).lower(*args_sds)``."""
+    seq, batch, kind = SHAPES[shape_name]
+    model = encdec if cfg.family == "encdec" else lm
+
+    if kind == "train":
+        p_sds, p_sh = params_sds(cfg, mesh)
+        opt = adamw_fn(constant_schedule(3e-4), weight_decay=0.1,
+                          max_grad_norm=1.0)
+        opt_sds = jax.eval_shape(opt.init, p_sds)
+        opt_sh = type(opt_sds)(
+            step=NamedSharding(mesh, P()),
+            mu=jax.tree.map(lambda s: s.sharding, p_sds),
+            nu=jax.tree.map(lambda s: s.sharding, p_sds))
+        state_sds = TrainState(
+            params=p_sds,
+            opt_state=_with_sharding(opt_sds, opt_sh),
+            step=_sds((), jnp.int32, mesh, P()))
+        batch_sds = _batch_sds(cfg, mesh, seq, batch)
+        step_fn = make_train_step(cfg, opt, mesh=mesh,
+                                  num_microbatches=cfg.train_microbatches)
+        return step_fn, (state_sds, batch_sds)
+
+    if kind == "prefill":
+        p_sds, _ = params_sds(cfg, mesh)
+        batch_sds = _batch_sds(cfg, mesh, seq, batch, with_labels=False)
+
+        if cfg.family == "encdec":
+            def prefill(params, batch):
+                return encdec.forward(params, batch["frames"],
+                                      batch["tokens"], cfg, mesh=mesh)
+        else:
+            def prefill(params, batch):
+                return lm.forward(params, batch["tokens"], cfg, mesh=mesh)
+        return prefill, (p_sds, batch_sds)
+
+    # decode kinds: one new token against a cache of length `seq`
+    p_sds, _ = params_sds(cfg, mesh)
+    caches_sds = jax.eval_shape(
+        functools.partial(serve_decode.init_caches, cfg, batch, seq))
+    caches_sds = _with_sharding(caches_sds,
+                                _cache_shardings(cfg, caches_sds, mesh))
+    token_sds = _sds((batch, 1), jnp.int32, mesh,
+                     shd.batch_spec(mesh, batch))
+    pos_sds = _sds((), jnp.int32, mesh, P())
+
+    def serve_step(params, caches, token, pos):
+        return serve_decode.decode_step(params, caches, token, pos, cfg,
+                                        mesh=mesh)
+    return serve_step, (p_sds, caches_sds, token_sds, pos_sds)

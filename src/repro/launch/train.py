@@ -1,0 +1,49 @@
+"""Training launcher: ``python -m repro.launch.train --arch stablelm-3b``.
+
+On this CPU container it trains the reduced config end-to-end (the ~100M /
+few-hundred-step driver lives in examples/train_lm.py); on a real cluster
+the same entrypoint takes --full --mesh to pjit over the production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ARCHS, get_config
+from repro.train import TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-3b", choices=list(ARCHS))
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--full", action="store_true",
+                    help="full (not reduced) config — cluster use")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=not args.full)
+    tcfg = TrainConfig(steps=args.steps, seq_len=args.seq_len,
+                       global_batch=args.global_batch, lr=args.lr,
+                       ckpt_dir=args.ckpt_dir,
+                       num_microbatches=args.microbatches)
+    trainer = Trainer(cfg, tcfg)
+
+    def on_straggler(step, dt):
+        print(f"[train] straggler watermark: step {step} took {dt:.2f}s")
+
+    trainer.straggler_hook = on_straggler
+    log = trainer.run()
+    for row in log[:: max(1, len(log) // 10)]:
+        print(f"[train] step={row['step']:5d} loss={row['loss']:.4f} "
+              f"gnorm={row['grad_norm']:.3f} {row['seconds']*1e3:.0f}ms")
+    print(f"[train] final loss: {log[-1]['loss']:.4f} "
+          f"(start {log[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Model assembly for the assigned architecture families."""
+
+from repro.models import encdec, lm
+
+
+def for_config(cfg):
+    return encdec if cfg.family == "encdec" else lm

@@ -1,0 +1,118 @@
+"""Encoder-decoder transformer (whisper-large-v3 backbone).
+
+The audio frontend (mel + conv) is a stub per the brief: the encoder
+consumes precomputed frame embeddings (B, S_enc, d_model) from
+``input_specs``.  Non-causal encoder self-attention, causal decoder
+self-attention + cross-attention; layernorm + GELU as in Whisper.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig
+from repro.models.lm import _apply_mlp, _apply_norm, _mlp_spec, _norm_spec
+from repro.nn.core import init_params, stack_specs
+
+
+def enc_block_spec(cfg: ModelConfig) -> Dict:
+    return {"ln1": _norm_spec(cfg, cfg.d_model),
+            "attn": nn.gqa_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim, cfg.qkv_bias),
+            "ln2": _norm_spec(cfg, cfg.d_model),
+            "mlp": _mlp_spec(cfg)}
+
+
+def dec_block_spec(cfg: ModelConfig) -> Dict:
+    spec = enc_block_spec(cfg)
+    spec["ln_x"] = _norm_spec(cfg, cfg.d_model)
+    spec["cross"] = nn.gqa_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim, cfg.qkv_bias)
+    return spec
+
+
+def model_spec(cfg: ModelConfig) -> Dict:
+    return {
+        "embed": nn.embedding_spec(cfg.vocab, cfg.d_model),
+        "enc_layers": stack_specs(enc_block_spec(cfg), cfg.enc_layers),
+        "enc_norm": _norm_spec(cfg, cfg.d_model),
+        "dec_layers": stack_specs(dec_block_spec(cfg), cfg.dec_layers),
+        "final_norm": _norm_spec(cfg, cfg.d_model),
+    }
+
+
+def init_model(cfg: ModelConfig, key: jax.Array) -> Dict:
+    return init_params(model_spec(cfg), key, dtype=jnp.dtype(cfg.dtype))
+
+
+def _self_attn(cfg, p, x, causal):
+    B, S, _ = x.shape
+    q, k, v = nn.qkv_project(p, x, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    pos = jnp.arange(S)
+    q = nn.apply_rope(q, pos[None, :], cfg.rope_theta)
+    k = nn.apply_rope(k, pos[None, :], cfg.rope_theta)
+    o = nn.chunked_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    return nn.out_project(p, o)
+
+
+def _cross_attn(cfg, p, x, enc_out):
+    from repro.nn.core import apply_dense
+    B, S, _ = x.shape
+    Se = enc_out.shape[1]
+    q = apply_dense(p["wq"], x).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = apply_dense(p["wk"], enc_out).reshape(B, Se, cfg.n_kv_heads,
+                                              cfg.head_dim)
+    v = apply_dense(p["wv"], enc_out).reshape(B, Se, cfg.n_kv_heads,
+                                              cfg.head_dim)
+    o = nn.chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    return nn.out_project(p, o)
+
+
+def encode(params: Dict, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, S_enc, d_model) stubbed frontend embeddings."""
+    def body(carry, layer_p):
+        x = carry
+        x = x + _self_attn(cfg, layer_p["attn"],
+                           _apply_norm(cfg, layer_p["ln1"], x), causal=False)
+        x = x + _apply_mlp(cfg, layer_p["mlp"],
+                           _apply_norm(cfg, layer_p["ln2"], x))
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, frames.astype(jnp.dtype(cfg.dtype)),
+                        params["enc_layers"])
+    return _apply_norm(cfg, params["enc_norm"], x)
+
+
+def decode_train(params: Dict, tokens: jax.Array, enc_out: jax.Array,
+                 cfg: ModelConfig) -> jax.Array:
+    x = nn.apply_embedding(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+
+    def body(carry, layer_p):
+        h = carry
+        h = h + _self_attn(cfg, layer_p["attn"],
+                           _apply_norm(cfg, layer_p["ln1"], h), causal=True)
+        h = h + _cross_attn(cfg, layer_p["cross"],
+                            _apply_norm(cfg, layer_p["ln_x"], h), enc_out)
+        h = h + _apply_mlp(cfg, layer_p["mlp"],
+                           _apply_norm(cfg, layer_p["ln2"], h))
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = _apply_norm(cfg, params["final_norm"], x)
+    return nn.unembed(params["embed"], x)
+
+
+def forward(params: Dict, frames: jax.Array, tokens: jax.Array,
+            cfg: ModelConfig, mesh=None) -> jax.Array:
+    return decode_train(params, tokens, encode(params, frames, cfg), cfg)

@@ -1,0 +1,147 @@
+"""GQA attention with online-softmax KV chunking.
+
+One implementation serves every attention arch here:
+  * training / prefill: ``chunked_attention`` — lax.scan over KV chunks with
+    a running (max, sum, acc), so activation memory is O(S·chunk) instead of
+    O(S²) and the HLO stays compact for the 512-device dry-run;
+  * decode: ``decode_attention`` — one query against the KV cache (masked to
+    the current position / sliding window).  Under pjit the cache may be
+    sharded on heads or on sequence; the SPMD partitioner inserts the
+    partial-softmax combine collectives for the latter.
+
+Sliding windows are expressed as a (possibly traced, per-layer) scalar with
+``NO_WINDOW`` meaning global — one code path covers gemma-style 5:1
+local:global stacks inside a scan over layers.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.core import ParamSpec, dense
+
+NO_WINDOW = 1 << 30
+_NEG = -1e30
+
+
+def gqa_spec(d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             qkv_bias: bool = False) -> Dict:
+    return {
+        "wq": dense(d_model, n_heads * head_dim, ("embed", "heads"),
+                    bias=qkv_bias),
+        "wk": dense(d_model, n_kv * head_dim, ("embed", "kv_heads"),
+                    bias=qkv_bias),
+        "wv": dense(d_model, n_kv * head_dim, ("embed", "kv_heads"),
+                    bias=qkv_bias),
+        "wo": dense(n_heads * head_dim, d_model, ("heads", "embed")),
+    }
+
+
+def qkv_project(p: Dict, x: jax.Array, n_heads: int, n_kv: int,
+                head_dim: int):
+    from repro.nn.core import apply_dense
+    B, S, _ = x.shape
+    q = apply_dense(p["wq"], x).reshape(B, S, n_heads, head_dim)
+    k = apply_dense(p["wk"], x).reshape(B, S, n_kv, head_dim)
+    v = apply_dense(p["wv"], x).reshape(B, S, n_kv, head_dim)
+    return q, k, v
+
+
+def out_project(p: Dict, o: jax.Array) -> jax.Array:
+    from repro.nn.core import apply_dense
+    B, S, H, D = o.shape
+    return apply_dense(p["wo"], o.reshape(B, S, H * D))
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True,
+                      window=NO_WINDOW,
+                      chunk: int = 1024,
+                      q_offset: int = 0,
+                      scale: Optional[float] = None) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, KH, D) with H % KH == 0.
+
+    Online softmax over KV chunks (flash-attention recurrence in XLA ops —
+    the Pallas kernel version of the same math lives in repro.kernels).
+    """
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]                      # may differ from D (MLA)
+    G = H // KH
+    if scale is None:
+        scale = D ** -0.5
+    chunk = min(chunk, Sk)
+    assert Sk % chunk == 0, (Sk, chunk)
+    n_chunks = Sk // chunk
+
+    qf = q.astype(jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(Sq)
+
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, chunk, KH, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, chunk, KH, Dv), 1, 0)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, cidx = xs
+        k_pos = cidx * chunk + jnp.arange(chunk)
+        # (B, KH, G, Sq, C)
+        logits = jnp.einsum("bqhgd,bchd->bhgqc",
+                            qf.reshape(B, Sq, KH, G, D).transpose(0, 1, 2, 3, 4),
+                            kb.astype(jnp.float32))
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        logits = jnp.where(mask[None, None, None], logits, _NEG)
+        m_new = jnp.maximum(m, logits.max(axis=-1, keepdims=True))
+        p_ = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p_.sum(axis=-1, keepdims=True)
+        pv = jnp.einsum("bhgqc,bchd->bhgqd", p_, vb.astype(jnp.float32))
+        acc_new = acc * alpha + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KH, G, Sq, 1), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, KH, G, Sq, 1), jnp.float32)
+    a0 = jnp.zeros((B, KH, G, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window=NO_WINDOW,
+                     scale: Optional[float] = None) -> jax.Array:
+    """q: (B, 1, H, D); caches: (B, S, KH, D); pos: scalar index of the
+    current token.  One masked softmax over the cache (linear per step)."""
+    B, _, H, D = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    if scale is None:
+        scale = D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    k_pos = jnp.arange(S)
+    logits = jnp.einsum("bqhgd,bshd->bhgqs",
+                        qf.reshape(B, 1, KH, G, D),
+                        k_cache.astype(jnp.float32))
+    mask = (k_pos <= pos) & (k_pos > pos - window)
+    logits = jnp.where(mask[None, None, None, None], logits, _NEG)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqs,bshd->bhgqd", p, v_cache.astype(jnp.float32)) / l
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, D).astype(q.dtype)
+
+
+def update_cache(cache: jax.Array, new: jax.Array, pos) -> jax.Array:
+    """Write ``new`` (B, 1, KH, D) into (B, S, KH, D) at ``pos`` via
+    dynamic_update_slice (touches O(slice) bytes, not O(cache))."""
+    zero = jnp.zeros((), jnp.int32)
+    return jax.lax.dynamic_update_slice(
+        cache, new.astype(cache.dtype),
+        (zero, jnp.asarray(pos, jnp.int32), zero, zero))

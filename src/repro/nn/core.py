@@ -1,0 +1,78 @@
+"""Functional NN substrate: parameters are plain pytrees (nested dicts of
+jnp arrays), modules are (init, apply) function pairs.  No flax/haiku in the
+container — and for a sharding-heavy framework, explicit pytrees keep the
+logical-axis annotation story simple (see repro.dist.sharding).
+
+Every parameter leaf is annotated with *logical axes* via a parallel tree of
+name tuples produced by the ``Init`` helpers; the dist layer maps logical
+axes -> mesh axes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    """Shape + logical axis names + initializer for one parameter leaf."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: Optional[float] = None
+
+    def make(self, key, dtype) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        fan_in = self.shape[0] if len(self.shape) >= 2 else max(self.shape[0], 1)
+        scale = self.scale if self.scale is not None else 1.0 / np.sqrt(fan_in)
+        if self.init == "embed":
+            scale = self.scale if self.scale is not None else 1.0
+        return (jax.random.normal(key, self.shape, jnp.float32) * scale
+                ).astype(dtype)
+
+
+def init_params(specs: Dict, key: jax.Array, dtype=jnp.float32) -> Dict:
+    """Instantiate a (nested) dict of ParamSpec into parameters."""
+    flat, treedef = jax.tree.flatten(specs,
+                                     is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(flat))
+    leaves = [s.make(k, dtype) for s, k in zip(flat, keys)]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def logical_axes(specs: Dict) -> Dict:
+    """The parallel tree of logical-axis tuples."""
+    return jax.tree.map(lambda s: s.axes, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def stack_specs(specs: Dict, n: int, axis_name: str = "layers") -> Dict:
+    """Stack a per-layer spec tree along a leading 'layers' dimension for
+    scan-over-layers (the MaxText pattern: one traced layer body)."""
+    def stack_one(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale)
+    return jax.tree.map(stack_one, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def dense(d_in: int, d_out: int, axes=("embed", "mlp"),
+          bias: bool = False, name: str = "w") -> Dict:
+    spec = {name: ParamSpec((d_in, d_out), axes)}
+    if bias:
+        spec[name + "_b"] = ParamSpec((d_out,), (axes[-1],), "zeros")
+    return spec
+
+
+def apply_dense(p: Dict, x: jax.Array, name: str = "w") -> jax.Array:
+    y = x @ p[name].astype(x.dtype)
+    if name + "_b" in p:
+        y = y + p[name + "_b"].astype(x.dtype)
+    return y

@@ -1,0 +1,94 @@
+"""Norms, MLPs, embeddings — the dense substrate shared by all archs."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.core import ParamSpec, apply_dense, dense
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(d: int, name_axis: str = "embed") -> Dict:
+    return {"scale": ParamSpec((d,), (name_axis,), "ones")}
+
+
+def apply_rmsnorm(p: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def layernorm_spec(d: int) -> Dict:
+    return {"scale": ParamSpec((d,), ("embed",), "ones"),
+            "bias": ParamSpec((d,), ("embed",), "zeros")}
+
+
+def apply_layernorm(p: Dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_spec(d_model: int, d_ff: int) -> Dict:
+    return {
+        "gate": dense(d_model, d_ff, ("embed", "mlp")),
+        "up": dense(d_model, d_ff, ("embed", "mlp")),
+        "down": dense(d_ff, d_model, ("mlp", "embed")),
+    }
+
+
+def apply_swiglu(p: Dict, x: jax.Array) -> jax.Array:
+    g = apply_dense(p["gate"], x)
+    u = apply_dense(p["up"], x)
+    return apply_dense(p["down"], jax.nn.silu(g) * u)
+
+
+def gelu_mlp_spec(d_model: int, d_ff: int, bias: bool = True) -> Dict:
+    return {
+        "up": dense(d_model, d_ff, ("embed", "mlp"), bias=bias),
+        "down": dense(d_ff, d_model, ("mlp", "embed"), bias=bias),
+    }
+
+
+def apply_gelu_mlp(p: Dict, x: jax.Array) -> jax.Array:
+    return apply_dense(p["down"], jax.nn.gelu(apply_dense(p["up"], x)))
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def embedding_spec(vocab: int, d_model: int) -> Dict:
+    return {"table": ParamSpec((vocab, d_model), ("vocab", "embed"),
+                               "embed", scale=1.0)}
+
+
+def apply_embedding(p: Dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p: Dict, x: jax.Array) -> jax.Array:
+    """Tied unembedding: logits in f32 for a stable softmax/loss."""
+    return x.astype(jnp.float32) @ p["table"].astype(jnp.float32).T
+
+
+def lm_head_spec(d_model: int, vocab: int) -> Dict:
+    return {"out": dense(d_model, vocab, ("embed", "vocab"))}
+
+
+def apply_lm_head(p: Dict, x: jax.Array) -> jax.Array:
+    return apply_dense(p["out"], x.astype(jnp.float32))

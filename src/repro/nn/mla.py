@@ -1,0 +1,136 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed to a ``kv_lora_rank``-dim latent + a shared RoPE key part;
+the decode cache stores only the latent (+rope key) — the MLA memory win.
+Training materializes full K/V and reuses the chunked-attention path; decode
+uses the weight-absorbed latent-space form.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import chunked_attention
+from repro.nn.core import ParamSpec, apply_dense, dense
+from repro.nn.layers import apply_rmsnorm, rmsnorm_spec
+from repro.nn.rope import apply_rope
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+
+def mla_spec(cfg: MLAConfig) -> Dict:
+    H = cfg.n_heads
+    return {
+        "wq": dense(cfg.d_model, H * cfg.qk_dim, ("embed", "heads")),
+        "w_dkv": dense(cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_dim,
+                       ("embed", None)),
+        "kv_norm": rmsnorm_spec(cfg.kv_lora_rank, None),
+        "w_uk": ParamSpec((cfg.kv_lora_rank, H, cfg.qk_nope_dim),
+                          (None, "heads", None)),
+        "w_uv": ParamSpec((cfg.kv_lora_rank, H, cfg.v_head_dim),
+                          (None, "heads", None)),
+        "wo": dense(H * cfg.v_head_dim, cfg.d_model, ("heads", "embed")),
+    }
+
+
+def _latent(p: Dict, x: jax.Array, cfg: MLAConfig, positions: jax.Array):
+    """Compressed latent + rope key part for a span of positions."""
+    dkv = apply_dense(p["w_dkv"], x)
+    c_kv, k_rope = jnp.split(dkv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = apply_rmsnorm(p["kv_norm"], c_kv)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)   # (B,S,rope_dim)
+    return c_kv, k_rope
+
+
+def _queries(p: Dict, x: jax.Array, cfg: MLAConfig, positions: jax.Array):
+    B, S, _ = x.shape
+    q = apply_dense(p["wq"], x).reshape(B, S, cfg.n_heads, cfg.qk_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def apply_mla(p: Dict, x: jax.Array, cfg: MLAConfig, *, causal: bool = True,
+              q_offset: int = 0, chunk: int = 1024) -> jax.Array:
+    """Training/prefill path: decompress K/V, run chunked attention."""
+    B, S, _ = x.shape
+    positions = q_offset + jnp.arange(S)
+    c_kv, k_rope = _latent(p, x, cfg, positions[None, :])
+    q_nope, q_rope = _queries(p, x, cfg, positions[None, :])
+
+    k_nope = jnp.einsum("bsr,rhd->bshd", c_kv.astype(jnp.float32),
+                        p["w_uk"].astype(jnp.float32)).astype(x.dtype)
+    v = jnp.einsum("bsr,rhd->bshd", c_kv.astype(jnp.float32),
+                   p["w_uv"].astype(jnp.float32)).astype(x.dtype)
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, S, cfg.n_heads, cfg.qk_rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h.astype(x.dtype)], axis=-1)
+    o = chunked_attention(q, k, v, causal=causal, chunk=chunk,
+                          q_offset=q_offset, scale=cfg.qk_dim ** -0.5)
+    return apply_dense(p["wo"], o.reshape(B, S, -1))
+
+
+# ---------------------------------------------------------------------------
+# decode: latent cache + absorbed weights
+# ---------------------------------------------------------------------------
+
+def init_mla_cache(cfg: MLAConfig, batch: int, max_seq: int,
+                   dtype=jnp.bfloat16) -> Dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, cfg.qk_rope_dim), dtype),
+    }
+
+
+def apply_mla_decode(p: Dict, x: jax.Array, cache: Dict, pos,
+                     cfg: MLAConfig) -> Tuple[jax.Array, Dict]:
+    """One-token step against the latent cache (weight-absorbed form:
+    scores and values both live in the kv_lora latent space)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos)
+    c_new, kr_new = _latent(p, x, cfg, positions)
+    zero = jnp.zeros((), jnp.int32)
+    pos32 = jnp.asarray(pos, jnp.int32)
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype),
+            (zero, pos32, zero)),
+        "k_rope": jax.lax.dynamic_update_slice(
+            cache["k_rope"], kr_new.astype(cache["k_rope"].dtype),
+            (zero, pos32, zero)),
+    }
+    q_nope, q_rope = _queries(p, x, cfg, positions)   # (B,1,H,*)
+    # absorb W_uk into the query: q_lat (B,1,H,R)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       p["w_uk"].astype(jnp.float32))
+    s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat,
+                       cache["c_kv"].astype(jnp.float32))
+    s_rope = jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                        cache["k_rope"].astype(jnp.float32))
+    s = (s_lat + s_rope) * (cfg.qk_dim ** -0.5)
+    k_pos = jnp.arange(cache["c_kv"].shape[1])
+    s = jnp.where((k_pos <= pos)[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", w,
+                       cache["c_kv"].astype(jnp.float32))   # latent values
+    o = jnp.einsum("bqhr,rhd->bqhd", o_lat, p["w_uv"].astype(jnp.float32))
+    o = o.reshape(B, 1, -1).astype(x.dtype)
+    return apply_dense(p["wo"], o), cache

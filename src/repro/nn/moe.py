@@ -1,0 +1,223 @@
+"""Mixture-of-Experts: top-k routing with two execution paths.
+
+* ``dense`` — every expert computed, outputs masked by the gates.  Exact,
+  used by CPU smoke tests and as the correctness oracle for the EP path.
+* ``ep`` — production expert parallelism: tokens are sorted by expert,
+  packed into fixed-capacity per-expert buffers, exchanged with
+  ``all_to_all`` over the ``model`` mesh axis inside ``shard_map``, run
+  through the local experts, and combined back.  Capacity overflow drops
+  tokens (standard Switch/GShard semantics); with a generous capacity
+  factor the two paths agree exactly, which the integration tests assert.
+
+Expert weights carry the ``("experts", ...)`` logical axis -> sharded over
+the ``model`` axis by the dist layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.nn.core import ParamSpec
+from repro.nn.layers import apply_swiglu
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int
+    n_shared: int = 0          # always-on shared experts (DeepSeek style)
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_scale: bool = False  # normalize top-k gate weights to sum to 1
+
+
+def moe_spec(cfg: MoEConfig) -> Dict:
+    spec = {
+        "router": {"w": ParamSpec((cfg.d_model, cfg.n_experts),
+                                  ("embed", None))},
+        "experts": {
+            "gate": ParamSpec((cfg.n_experts, cfg.d_model, cfg.d_ff),
+                              ("experts", "embed", "mlp")),
+            "up": ParamSpec((cfg.n_experts, cfg.d_model, cfg.d_ff),
+                            ("experts", "embed", "mlp")),
+            "down": ParamSpec((cfg.n_experts, cfg.d_ff, cfg.d_model),
+                              ("experts", "mlp", "embed")),
+        },
+    }
+    if cfg.n_shared:
+        d_sh = cfg.shared_d_ff or cfg.n_shared * cfg.d_ff
+        spec["shared"] = {
+            "gate": {"w": ParamSpec((cfg.d_model, d_sh), ("embed", "mlp"))},
+            "up": {"w": ParamSpec((cfg.d_model, d_sh), ("embed", "mlp"))},
+            "down": {"w": ParamSpec((d_sh, cfg.d_model), ("mlp", "embed"))},
+        }
+    return spec
+
+
+def router_probs(p: Dict, x: jax.Array, cfg: MoEConfig):
+    logits = x.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.router_scale:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    return gate_vals, gate_idx, probs
+
+
+def _expert_ffn(experts: Dict, xb: jax.Array) -> jax.Array:
+    """xb: (E, C, d) -> (E, C, d) through each expert's SwiGLU."""
+    g = jnp.einsum("ecd,edf->ecf", xb, experts["gate"].astype(xb.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xb, experts["up"].astype(xb.dtype))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                      experts["down"].astype(xb.dtype))
+
+
+def apply_moe_dense(p: Dict, x: jax.Array, cfg: MoEConfig) -> jax.Array:
+    """Oracle path: all experts on all tokens, gate-combined."""
+    B, S, D = x.shape
+    gate_vals, gate_idx, _ = router_probs(p, x, cfg)
+    xt = x.reshape(B * S, D)
+    # (E, T, d): every expert sees every token
+    y_all = _expert_ffn(p["experts"],
+                        jnp.broadcast_to(xt, (cfg.n_experts, B * S, D)))
+    onehot = jax.nn.one_hot(gate_idx.reshape(B * S, cfg.top_k),
+                            cfg.n_experts, dtype=jnp.float32)
+    weights = jnp.einsum("tk,tke->te", gate_vals.reshape(B * S, cfg.top_k)
+                         .astype(jnp.float32), onehot)
+    y = jnp.einsum("te,etd->td", weights, y_all.astype(jnp.float32))
+    out = y.reshape(B, S, D).astype(x.dtype)
+    if cfg.n_shared:
+        out = out + apply_swiglu(p["shared"], x)
+    return out
+
+
+def _pack_dispatch(xt, gate_vals, gate_idx, n_experts, capacity):
+    """Sort-free capacity dispatch: rank tokens within their expert via a
+    cumulative count, drop beyond capacity, scatter into (E, C, d)."""
+    T, D = xt.shape
+    k = gate_idx.shape[-1]
+    flat_e = gate_idx.reshape(T * k)                    # expert of each slot
+    flat_g = gate_vals.reshape(T * k).astype(jnp.float32)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)  # (T*k, E)
+    rank = (jnp.cumsum(onehot, axis=0) * onehot).sum(axis=-1) - 1
+    # rank = 0-based position of the slot within its expert's buffer
+    keep = rank < capacity
+    slot = jnp.where(keep, flat_e * capacity + rank, n_experts * capacity)
+    buf = jnp.zeros((n_experts * capacity + 1, D), xt.dtype)
+    buf = buf.at[slot].set(xt[flat_t])                  # drops land in slot -1
+    return (buf[:-1].reshape(n_experts, capacity, D),
+            slot, flat_t, flat_g * keep.astype(jnp.float32))
+
+
+def apply_moe_ep(p: Dict, x: jax.Array, cfg: MoEConfig, mesh,
+                 axis: str = "model") -> jax.Array:
+    """Expert-parallel path via shard_map + all_to_all over ``axis``."""
+    ep = mesh.shape[axis]
+    assert cfg.n_experts % ep == 0, (cfg.n_experts, ep)
+    e_local = cfg.n_experts // ep
+
+    def local_fn(xs, router_w, experts):
+        B, S, D = xs.shape
+        T = B * S
+        xt = xs.reshape(T, D)
+        logits = xt.astype(jnp.float32) @ router_w.astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, cfg.top_k)
+        if cfg.router_scale:
+            gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+        capacity = max(int(T * cfg.top_k * cfg.capacity_factor
+                           // cfg.n_experts), 4)
+        buf, slot, flat_t, flat_g = _pack_dispatch(
+            xt, gate_vals, gate_idx, cfg.n_experts, capacity)
+        # (E, C, d) -> exchange: every peer sends my local experts' rows.
+        # After all_to_all, dim 0 indexes the SOURCE rank: transpose it next
+        # to capacity before flattening per local expert.
+        buf = buf.reshape(ep, e_local, capacity, D)
+        buf = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0,
+                                 tiled=False)            # (src, e_local, C, d)
+        buf = buf.transpose(1, 0, 2, 3).reshape(e_local, ep * capacity, D)
+        y = _expert_ffn(experts, buf)                    # local experts
+        y = y.reshape(e_local, ep, capacity, D).transpose(1, 0, 2, 3)
+        y = jax.lax.all_to_all(y, axis, split_axis=0, concat_axis=0,
+                               tiled=False)              # (home, e_local, C, d)
+        y = y.reshape(cfg.n_experts * capacity, D)       # e = home*e_local+j
+        y = jnp.concatenate([y, jnp.zeros((1, D), y.dtype)], axis=0)
+        gathered = y[jnp.minimum(slot, cfg.n_experts * capacity)]
+        contrib = gathered.astype(jnp.float32) * flat_g[:, None]
+        out = jnp.zeros((T, D), jnp.float32).at[flat_t].add(contrib)
+        return out.reshape(B, S, D).astype(xs.dtype)
+
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(("pod", "data") if "pod" in mesh.shape else "data",
+                    axis, None),
+                  P(None, None),
+                  P(None, axis, None, None) if False else
+                  jax.tree.map(lambda _: P(axis, None, None), p["experts"])),
+        out_specs=P(("pod", "data") if "pod" in mesh.shape else "data",
+                    axis, None),
+        check_vma=False)
+    out = fn(x, p["router"]["w"], p["experts"])
+    if cfg.n_shared:
+        out = out + apply_swiglu(p["shared"], x)
+    return out
+
+
+def apply_moe_ep_replicated(p: Dict, x: jax.Array, cfg: MoEConfig, mesh,
+                            axis: str = "model") -> jax.Array:
+    """EP for token counts too small to shard on the model axis (decode):
+    activations replicate over ``axis``, experts stay sharded; each rank
+    computes its local experts on every token and the combine is a psum."""
+    ep = mesh.shape[axis]
+    e_local = cfg.n_experts // ep
+
+    def local_fn(xs, router_w, experts):
+        B, S, D = xs.shape
+        T = B * S
+        xt = xs.reshape(T, D)
+        logits = xt.astype(jnp.float32) @ router_w.astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, cfg.top_k)
+        if cfg.router_scale:
+            gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+        rank = jax.lax.axis_index(axis)
+        lo = rank * e_local
+        onehot = jax.nn.one_hot(gate_idx, cfg.n_experts, dtype=jnp.float32)
+        weights = jnp.einsum("tk,tke->te", gate_vals.astype(jnp.float32),
+                             onehot)                       # (T, E)
+        w_local = jax.lax.dynamic_slice(weights, (0, lo), (T, e_local))
+        y_local = _expert_ffn(experts,
+                              jnp.broadcast_to(xt, (e_local, T, D)))
+        y = jnp.einsum("te,etd->td", w_local, y_local.astype(jnp.float32))
+        y = jax.lax.psum(y, axis)
+        return y.reshape(B, S, D).astype(xs.dtype)
+
+    dp = ("pod", "data") if "pod" in mesh.shape else "data"
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dp, None, None), P(None, None),
+                  jax.tree.map(lambda _: P(axis, None, None), p["experts"])),
+        out_specs=P(dp, None, None),
+        check_vma=False)
+    out = fn(x, p["router"]["w"], p["experts"])
+    if cfg.n_shared:
+        out = out + apply_swiglu(p["shared"], x)
+    return out
+
+
+def apply_moe(p: Dict, x: jax.Array, cfg: MoEConfig,
+              mesh=None, axis: str = "model") -> jax.Array:
+    if mesh is not None and axis in mesh.shape and mesh.shape[axis] > 1 \
+            and cfg.n_experts % mesh.shape[axis] == 0:
+        if x.shape[1] % mesh.shape[axis] == 0:
+            return apply_moe_ep(p, x, cfg, mesh, axis)
+        return apply_moe_ep_replicated(p, x, cfg, mesh, axis)
+    return apply_moe_dense(p, x, cfg)

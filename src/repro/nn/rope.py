@@ -1,0 +1,25 @@
+"""Rotary position embeddings (shared by every attention family here)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    if x.ndim == ang.ndim + 1:                        # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

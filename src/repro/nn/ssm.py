@@ -1,0 +1,140 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Training path uses the chunked SSD oracle (repro.kernels.ref.ssd_chunk; the
+Pallas version is repro.kernels.ssd); decode carries an O(1) recurrent state
+(B, H, P, N) plus a depthwise-conv tail — the property that makes the
+``long_500k`` cell tractable for mamba2/zamba2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from repro.nn.core import ParamSpec, dense
+from repro.nn.layers import apply_rmsnorm, rmsnorm_spec
+
+CONV_WIDTH = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_inner: int            # usually 2 * d_model
+    n_heads: int            # d_inner // head_p
+    head_p: int             # channels per head (P)
+    n_groups: int           # B/C groups (G)
+    d_state: int            # N
+
+
+def ssm_spec(cfg: SSMConfig) -> Dict:
+    conv_dim = cfg.d_inner + 2 * cfg.n_groups * cfg.d_state
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.n_groups * cfg.d_state + cfg.n_heads
+    return {
+        "in_proj": dense(cfg.d_model, d_in_proj, ("embed", "mlp")),
+        "conv_w": ParamSpec((CONV_WIDTH, conv_dim), (None, "mlp"), "normal",
+                            scale=0.5),
+        "conv_b": ParamSpec((conv_dim,), ("mlp",), "zeros"),
+        "a_log": ParamSpec((cfg.n_heads,), ("heads",), "zeros"),
+        "d_skip": ParamSpec((cfg.n_heads,), ("heads",), "ones"),
+        "dt_bias": ParamSpec((cfg.n_heads,), ("heads",), "zeros"),
+        "norm": rmsnorm_spec(cfg.d_inner, "mlp"),
+        "out_proj": dense(cfg.d_inner, cfg.d_model, ("mlp", "embed")),
+    }
+
+
+def _split_proj(cfg: SSMConfig, zxbcdt: jax.Array):
+    gn = cfg.n_groups * cfg.d_state
+    z, x, b, c, dt = jnp.split(
+        zxbcdt,
+        [cfg.d_inner, 2 * cfg.d_inner, 2 * cfg.d_inner + gn,
+         2 * cfg.d_inner + 2 * gn],
+        axis=-1)
+    return z, x, b, c, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width CONV_WIDTH.  x: (B, S, C); w: (W, C)."""
+    pads = jnp.pad(x, ((0, 0), (CONV_WIDTH - 1, 0), (0, 0)))
+    out = sum(pads[:, i: i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(CONV_WIDTH))
+    return out + b[None, None, :]
+
+
+def apply_ssm(p: Dict, x: jax.Array, cfg: SSMConfig) -> jax.Array:
+    """Training/prefill forward.  x: (B, S, d_model)."""
+    from repro.nn.core import apply_dense
+    B, S, _ = x.shape
+    zxbcdt = apply_dense(p["in_proj"], x)
+    z, xs, b, c, dt = _split_proj(cfg, zxbcdt)
+    gn = cfg.n_groups * cfg.d_state
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"].astype(x.dtype),
+                                        p["conv_b"].astype(x.dtype)))
+    xs, b, c = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + gn], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))     # (B,S,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32)) * dt            # log decay
+    xh = xs.reshape(B, S, cfg.n_heads, cfg.head_p)
+    xh = xh * dt[..., None].astype(xh.dtype)                     # dt-scaled input
+    bh = b.reshape(B, S, cfg.n_groups, cfg.d_state)
+    ch = c.reshape(B, S, cfg.n_groups, cfg.d_state)
+    y = kref.ssd_chunk(xh, a, bh, ch)                            # (B,S,H,P)
+    y = y + xh * p["d_skip"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(B, S, cfg.d_inner)
+    y = apply_rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return apply_dense(p["out_proj"], y)
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1) state per step
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: SSMConfig, batch: int, dtype=jnp.float32) -> Dict:
+    conv_dim = cfg.d_inner + 2 * cfg.n_groups * cfg.d_state
+    return {
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.head_p, cfg.d_state),
+                           jnp.float32),
+    }
+
+
+def apply_ssm_decode(p: Dict, x: jax.Array, cache: Dict,
+                     cfg: SSMConfig) -> Tuple[jax.Array, Dict]:
+    """One-token step.  x: (B, 1, d_model)."""
+    from repro.nn.core import apply_dense
+    B = x.shape[0]
+    zxbcdt = apply_dense(p["in_proj"], x)
+    z, xs, b, c, dt = _split_proj(cfg, zxbcdt)
+    gn = cfg.n_groups * cfg.d_state
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)               # (B,1,C)
+    window = jnp.concatenate([cache["conv"], conv_in], axis=1)   # (B,W,C)
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window, w)[:, None, :]
+        + p["conv_b"].astype(x.dtype)[None, None, :])
+    xs, b, c = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + gn], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))[:, 0]   # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32)) * dt                # (B,H)
+    xh = xs.reshape(B, cfg.n_heads, cfg.head_p) * dt[..., None].astype(xs.dtype)
+    rep = cfg.n_heads // cfg.n_groups
+    bh = jnp.repeat(b.reshape(B, cfg.n_groups, cfg.d_state), rep, axis=1)
+    ch = jnp.repeat(c.reshape(B, cfg.n_groups, cfg.d_state), rep, axis=1)
+
+    decay = jnp.exp(a)[..., None, None]                              # (B,H,1,1)
+    state = cache["state"] * decay + (xh.astype(jnp.float32)[..., None]
+                                      * bh.astype(jnp.float32)[..., None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", state, ch.astype(jnp.float32))
+    y = y.astype(x.dtype) + xh * p["d_skip"].astype(xh.dtype)[None, :, None]
+    y = y.reshape(B, 1, cfg.d_inner)
+    y = apply_rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = apply_dense(p["out_proj"], y)
+    new_cache = {"conv": window[:, 1:], "state": state}
+    return out, new_cache

@@ -1,0 +1,9 @@
+from repro.optim.adamw import Optimizer, adam, adamw, sgd_momentum
+from repro.optim.schedule import (constant_schedule, cosine_schedule,
+                                  linear_warmup_cosine, linear_schedule)
+
+__all__ = [
+    "Optimizer", "adam", "adamw", "sgd_momentum",
+    "constant_schedule", "cosine_schedule", "linear_warmup_cosine",
+    "linear_schedule",
+]

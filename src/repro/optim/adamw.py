@@ -1,0 +1,115 @@
+"""Optimizers built from scratch (the container has no optax).
+
+Functional contract mirroring optax so the training loop and PPO share one
+interface::
+
+    opt = adamw(lr_schedule, weight_decay=0.1)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+All moments are kept in float32 regardless of parameter dtype (mixed
+precision training keeps bf16 params + f32 optimizer state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import clip_by_global_norm
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: object
+    nu: object
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, new_state)
+
+
+def _as_schedule(lr) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, max_grad_norm: Optional[float] = None,
+          mask: Optional[Callable] = None) -> Optimizer:
+    """AdamW with decoupled weight decay and optional global-norm clipping.
+
+    ``mask(params)`` returns a pytree of bools selecting parameters that
+    receive weight decay (convention: 2D+ weights yes, biases/norm scales no).
+    """
+    sched = _as_schedule(lr)
+
+    def init(params):
+        f32 = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree.map(f32, params),
+                         nu=jax.tree.map(f32, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, g32)
+        t = step.astype(jnp.float32)
+        mu_hat = jax.tree.map(lambda m: m / (1 - b1 ** t), mu)
+        nu_hat = jax.tree.map(lambda v: v / (1 - b2 ** t), nu)
+        lr_t = sched(step)
+        if weight_decay:
+            wd_mask = (mask(params) if mask is not None
+                       else jax.tree.map(lambda p: p.ndim >= 2, params))
+            upd = jax.tree.map(
+                lambda m, v, p, use_wd: (-lr_t * (m / (jnp.sqrt(v) + eps)
+                                                  + weight_decay * jnp.where(use_wd, 1.0, 0.0)
+                                                  * p.astype(jnp.float32))).astype(p.dtype),
+                mu_hat, nu_hat, params, wd_mask)
+        else:
+            upd = jax.tree.map(
+                lambda m, v, p: (-lr_t * m / (jnp.sqrt(v) + eps)).astype(p.dtype),
+                mu_hat, nu_hat, params)
+        return upd, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-5,
+         max_grad_norm: Optional[float] = None) -> Optimizer:
+    """Plain Adam with the PPO-standard eps=1e-5 (37-details study)."""
+    return adamw(lr, b1=b1, b2=b2, eps=eps, weight_decay=0.0,
+                 max_grad_norm=max_grad_norm)
+
+
+def sgd_momentum(lr, momentum: float = 0.9) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                         nu=None)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state.mu, grads)
+        lr_t = sched(step)
+        upd = jax.tree.map(lambda m, p: (-lr_t * m).astype(p.dtype), mu, params)
+        return upd, AdamState(step=step, mu=mu, nu=None)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)

@@ -1,0 +1,36 @@
+"""Learning-rate schedules (step -> lr), pure functions of a jnp step."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_schedule(lr: float, total_steps: int, end_frac: float = 0.0):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return lr * ((1.0 - t) + t * end_frac)
+    return f
+
+
+def cosine_schedule(lr: float, total_steps: int, min_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * (min_frac + (1.0 - min_frac) * cos)
+    return f
+
+
+def linear_warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                         min_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = lr * (min_frac + (1.0 - min_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return f

@@ -1,0 +1,16 @@
+"""Compiler-integration layer: Pallas kernel -> TSASS -> assembly game
+-> cached optimized schedule (the paper's Triton integration, §4)."""
+
+from repro.sched.api import CuAsmRL, KernelDef, TARGET
+from repro.sched.autotune import TuneResult, autotune
+from repro.sched.baseline import naive_schedule, schedule
+from repro.sched.cache import Artifact, load, save
+from repro.sched.lowering import LoweredKernel, lower
+from repro.sched.spec import KernelSpec, TileIO
+from repro.sched.verify import probabilistic_test
+
+__all__ = [
+    "CuAsmRL", "KernelDef", "TARGET", "TuneResult", "autotune",
+    "naive_schedule", "schedule", "Artifact", "load", "save",
+    "LoweredKernel", "lower", "KernelSpec", "TileIO", "probabilistic_test",
+]

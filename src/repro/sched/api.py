@@ -1,0 +1,113 @@
+"""Public API of the schedule optimizer — the ``@cuasmrl.jit`` analogue
+(paper §4.1 Listing 4, §4.2 Listing 5).
+
+    kdef = repro.kernels.KERNELS["matmul_leakyrelu"]
+    opt  = CuAsmRL(kdef)
+    art  = opt.optimize()          # hierarchical search + assembly game
+    art  = opt.deploy()            # deploy-time lookup, no training
+
+Pipeline per kernel: autotune configs (§3.1) -> lower best config to TSASS ->
+baseline -O3 schedule -> PPO assembly game (§3.3-3.7) -> probabilistic
+testing (§4.1) -> cache artifact (§4.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.core.game import GameResult, train_on_program
+from repro.core.machine import Machine
+from repro.core.microbench import build_stall_table
+from repro.core.ppo import PPOConfig
+from repro.sched import autotune as autotune_mod
+from repro.sched import baseline, cache, lowering, verify
+from repro.sched.spec import KernelSpec
+
+TARGET = "tpu-tsass-v1"
+
+
+@dataclasses.dataclass
+class KernelDef:
+    """One optimizable kernel: its Pallas/ref callables plus the schedule
+    spec constructor and the autotuner's configuration space."""
+    name: str
+    make_spec: Callable[[Dict], KernelSpec]
+    configs: List[Dict]
+    pallas_fn: Optional[Callable] = None
+    ref_fn: Optional[Callable] = None
+
+
+class CuAsmRL:
+    def __init__(self, kdef: KernelDef,
+                 ppo: Optional[PPOConfig] = None,
+                 cache_dir: str = cache.DEFAULT_CACHE_DIR,
+                 target: str = TARGET,
+                 machine_factory: Callable[[], Machine] = Machine,
+                 stall_db: Optional[Dict[str, int]] = None,
+                 verify_seeds: int = 4):
+        self.kdef = kdef
+        self.ppo = ppo or PPOConfig()
+        self.cache_dir = cache_dir
+        self.target = target
+        self.machine_factory = machine_factory
+        # Table 1: built once per target by dependency microbenchmarking
+        self.stall_db = stall_db if stall_db is not None else \
+            build_stall_table(machine=machine_factory())
+        self.verify_seeds = verify_seeds
+        self.last_game: Optional[GameResult] = None
+
+    # ---- §4.2 Listing 5: invoke optimization --------------------------------
+
+    def optimize(self, force: bool = False, verbose: bool = False
+                 ) -> cache.Artifact:
+        tune = autotune_mod.autotune(self.kdef.make_spec, self.kdef.configs,
+                                     self.machine_factory())
+        cfg = tune.best.config
+        cached = None if force else cache.load(self.kdef.name, self.target,
+                                               cfg, self.cache_dir)
+        if cached is not None:
+            return cached
+
+        spec = self.kdef.make_spec(cfg)
+        lowered = lowering.lower(spec)
+        o3 = baseline.schedule(lowered)
+        game = train_on_program(o3, stall_db=self.stall_db, cfg=self.ppo,
+                                machine_factory=self.machine_factory,
+                                verbose=verbose)
+        self.last_game = game
+
+        check = verify.probabilistic_test(o3, game.best_program,
+                                          n_seeds=self.verify_seeds,
+                                          machine=self.machine_factory())
+        if not check.ok:
+            raise RuntimeError(
+                f"probabilistic testing FAILED for {self.kdef.name}: "
+                f"seeds {check.failures} — masking bug, refusing to cache")
+
+        art = cache.Artifact(
+            kernel=self.kdef.name, target=self.target, config=cfg,
+            program=game.best_program,
+            baseline_cycles=game.baseline_cycles,
+            optimized_cycles=game.best_cycles,
+            meta={
+                "autotune": [dataclasses.asdict(e) for e in tune.entries],
+                "improvement": game.improvement,
+                "ppo_updates": len(game.stats),
+                "verify_seeds": check.n_seeds,
+            })
+        cache.save(art, self.cache_dir)
+        return art
+
+    # ---- §4.2 Listing 5: deployment lookup ------------------------------------
+
+    def deploy(self, load_dir: Optional[str] = None) -> cache.Artifact:
+        tune = autotune_mod.autotune(self.kdef.make_spec, self.kdef.configs,
+                                     self.machine_factory())
+        art = cache.load(self.kdef.name, self.target, tune.best.config,
+                         load_dir or self.cache_dir)
+        if art is None:
+            raise FileNotFoundError(
+                f"no cached schedule for {self.kdef.name}; run optimize() "
+                f"offline first (the paper's search/deploy split)")
+        return art

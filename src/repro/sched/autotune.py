@@ -1,0 +1,55 @@
+"""Hierarchical search, stage 1 (paper §3.1): autotune kernel configurations
+before the RL agent optimizes the schedule of the best one.
+
+"The autotuner employs a grid search-like strategy, which enumerates
+user-provided kernel configurations, compiles with the kernel
+configurations, measures the execution throughput on the target GPU, and
+greedily selects as well as caches the optimal set of kernel
+configurations."  Our target is the TSASS machine; the figure of merit is
+useful work per cycle (configs move different tile volumes per step, so raw
+cycles are not comparable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.machine import Machine
+from repro.sched import baseline, lowering
+from repro.sched.spec import KernelSpec
+
+
+@dataclasses.dataclass
+class TuneEntry:
+    config: Dict
+    cycles: float
+    work_per_cycle: float
+    num_instructions: int
+
+
+@dataclasses.dataclass
+class TuneResult:
+    best: TuneEntry
+    entries: List[TuneEntry]
+
+
+def _work_per_step(spec: KernelSpec) -> float:
+    if spec.flops_per_step:
+        return float(spec.flops_per_step)
+    return float(sum(t.nbytes for t in spec.inputs + spec.outputs))
+
+
+def autotune(make_spec: Callable[[Dict], KernelSpec], configs: List[Dict],
+             machine: Optional[Machine] = None) -> TuneResult:
+    machine = machine or Machine()
+    entries: List[TuneEntry] = []
+    for cfg in configs:
+        spec = make_spec(cfg)
+        program = baseline.schedule(lowering.lower(spec))
+        cycles = machine.run(program).cycles
+        work = _work_per_step(spec) * spec.steps
+        entries.append(TuneEntry(cfg, cycles, work / max(cycles, 1.0),
+                                 len(program)))
+    best = max(entries, key=lambda e: e.work_per_cycle)
+    return TuneResult(best=best, entries=entries)

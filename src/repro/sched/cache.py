@@ -1,0 +1,86 @@
+"""Offline-search / deploy-time-lookup artifact cache (paper §4.2).
+
+"The best optimized cubin found throughout the assembly game is written to
+the file system, prefixed by GPU type, workload type etc., as the key to
+lookup.  At deployment ... it invokes a lookup process instead of training."
+
+Artifacts are TSASS text (round-trippable through the parser) plus a JSON
+sidecar with measured cycles, the winning autotune config and provenance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from typing import Dict, List, Optional
+
+from repro.core.isa import Instruction, program_text
+from repro.core.parser import parse_program
+
+DEFAULT_CACHE_DIR = os.environ.get("REPRO_SCHED_CACHE", ".repro_cache")
+
+
+@dataclasses.dataclass
+class Artifact:
+    kernel: str
+    target: str
+    config: Dict
+    program: List[Instruction]
+    baseline_cycles: float
+    optimized_cycles: float
+    meta: Dict
+
+    @property
+    def speedup(self) -> float:
+        return self.baseline_cycles / max(self.optimized_cycles, 1.0)
+
+
+def cache_key(kernel: str, target: str, config: Dict) -> str:
+    blob = json.dumps({"k": kernel, "t": target, "c": config}, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def _paths(cache_dir: str, kernel: str, target: str, config: Dict):
+    key = cache_key(kernel, target, config)
+    d = os.path.join(cache_dir, target, kernel)
+    return os.path.join(d, f"{key}.tsass"), os.path.join(d, f"{key}.json")
+
+
+def save(artifact: Artifact, cache_dir: str = DEFAULT_CACHE_DIR) -> str:
+    tsass_path, json_path = _paths(cache_dir, artifact.kernel,
+                                   artifact.target, artifact.config)
+    os.makedirs(os.path.dirname(tsass_path), exist_ok=True)
+    # atomic writes: temp + rename (same discipline as the checkpointer)
+    for path, payload in (
+        (tsass_path, program_text(artifact.program) + "\n"),
+        (json_path, json.dumps({
+            "kernel": artifact.kernel, "target": artifact.target,
+            "config": artifact.config,
+            "baseline_cycles": artifact.baseline_cycles,
+            "optimized_cycles": artifact.optimized_cycles,
+            "meta": artifact.meta}, indent=2)),
+    ):
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path))
+        with os.fdopen(fd, "w") as f:
+            f.write(payload)
+        os.replace(tmp, path)
+    return tsass_path
+
+
+def load(kernel: str, target: str, config: Dict,
+         cache_dir: str = DEFAULT_CACHE_DIR) -> Optional[Artifact]:
+    tsass_path, json_path = _paths(cache_dir, kernel, target, config)
+    if not (os.path.exists(tsass_path) and os.path.exists(json_path)):
+        return None
+    with open(json_path) as f:
+        meta = json.load(f)
+    with open(tsass_path) as f:
+        program = parse_program(f.read())
+    return Artifact(kernel=meta["kernel"], target=meta["target"],
+                    config=meta["config"], program=program,
+                    baseline_cycles=meta["baseline_cycles"],
+                    optimized_cycles=meta["optimized_cycles"],
+                    meta=meta.get("meta", {}))

@@ -1,0 +1,4 @@
+from repro.serve.decode import decode_step, init_caches
+from repro.serve.engine import generate
+
+__all__ = ["decode_step", "init_caches", "generate"]

@@ -1,0 +1,230 @@
+"""Serving: KV caches + single-token decode steps for every family.
+
+Decode is deliberately *unrolled* over layers (unlike the scanned training
+path): each layer owns its cache pytree, so per-layer cache shapes can
+differ — gemma's local layers keep a bounded ``window``-sized ring buffer
+while its global layers keep the full sequence; mamba layers keep an O(1)
+recurrent state.  The decode HLO is tiny per layer, so unrolling stays
+cheap to compile while making the memory roofline of ``decode_32k`` /
+``long_500k`` honest.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig
+from repro.models.lm import (_apply_mlp, _apply_norm, mla_config, moe_config,
+                             ssm_config, window_schedule)
+from repro.nn.attention import NO_WINDOW
+from repro.nn.mla import apply_mla_decode, init_mla_cache
+from repro.nn.ssm import apply_ssm_decode, init_ssm_cache
+
+_NEG = -1e30
+
+
+def _layer_params(stacked: Dict, i: int) -> Dict:
+    return jax.tree.map(lambda a: a[i], stacked)
+
+
+def _cache_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def _attn_cache(cfg: ModelConfig, batch: int, length: int) -> Dict:
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, _cache_dtype(cfg)),
+            "v": jnp.zeros(shape, _cache_dtype(cfg))}
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int) -> List:
+    """One cache pytree per layer (family-dependent shapes)."""
+    caches: List = []
+    if cfg.family in ("dense", "moe"):
+        wins = [int(w) for w in window_schedule(cfg)]
+        for li in range(cfg.n_layers):
+            if cfg.mla:
+                caches.append(init_mla_cache(mla_config(cfg), batch, max_seq,
+                                             _cache_dtype(cfg)))
+            else:
+                length = max_seq if wins[li] >= NO_WINDOW \
+                    else min(wins[li], max_seq)
+                caches.append(_attn_cache(cfg, batch, length))
+    elif cfg.family == "ssm":
+        for _ in range(cfg.n_layers):
+            caches.append(init_ssm_cache(ssm_config(cfg), batch,
+                                         _cache_dtype(cfg)))
+    elif cfg.family == "hybrid":
+        for _ in range(cfg.n_layers):
+            caches.append(init_ssm_cache(ssm_config(cfg), batch,
+                                         _cache_dtype(cfg)))
+        for _ in range(cfg.n_layers // cfg.shared_attn_every):
+            caches.append(_attn_cache(cfg, batch, max_seq))
+    elif cfg.family == "encdec":
+        from repro.configs.whisper_large_v3 import ENC_LEN_DECODE
+        for _ in range(cfg.dec_layers):
+            c = _attn_cache(cfg, batch, max_seq)
+            c["ck"] = jnp.zeros((batch, ENC_LEN_DECODE, cfg.n_kv_heads,
+                                 cfg.head_dim), _cache_dtype(cfg))
+            c["cv"] = jnp.zeros_like(c["ck"])
+            caches.append(c)
+    else:
+        raise ValueError(cfg.family)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# per-layer decode attention
+# ---------------------------------------------------------------------------
+
+def _attn_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
+                 pos, window: int) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, d); ring buffer for local windows, absolute cache else."""
+    from repro.nn.core import apply_dense
+    B = x.shape[0]
+    q = apply_dense(p["wq"], x).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+    k = apply_dense(p["wk"], x).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = apply_dense(p["wv"], x).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = nn.apply_rmsnorm(p["q_norm"], q)
+        k = nn.apply_rmsnorm(p["k_norm"], k)
+    positions = jnp.full((B, 1), pos)
+    q = nn.apply_rope(q, positions, cfg.rope_theta)
+    k = nn.apply_rope(k, positions, cfg.rope_theta)
+
+    S = cache["k"].shape[1]
+    ring = window < NO_WINDOW and S <= window
+    if ring:
+        k_cache = jnp.concatenate([cache["k"][:, 1:], k.astype(cache["k"].dtype)],
+                                  axis=1)
+        v_cache = jnp.concatenate([cache["v"][:, 1:], v.astype(cache["v"].dtype)],
+                                  axis=1)
+        k_positions = pos - (S - 1) + jnp.arange(S)
+        mask = k_positions >= 0
+    else:
+        k_cache = nn.update_cache(cache["k"], k, pos)
+        v_cache = nn.update_cache(cache["v"], v, pos)
+        k_positions = jnp.arange(S)
+        mask = (k_positions <= pos) & (k_positions > pos - window)
+
+    o = _masked_decode_attn(q, k_cache, v_cache, mask)
+    out = nn.out_project(p, o)
+    return out, {"k": k_cache, "v": v_cache, **{kk: vv for kk, vv in
+                                                cache.items()
+                                                if kk not in ("k", "v")}}
+
+
+def _masked_decode_attn(q, k_cache, v_cache, mask):
+    B, _, H, D = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    qf = q.astype(jnp.float32) * (D ** -0.5)
+    logits = jnp.einsum("bqhgd,bshd->bhgqs", qf.reshape(B, 1, KH, G, D),
+                        k_cache.astype(jnp.float32))
+    logits = jnp.where(mask[None, None, None, None], logits, _NEG)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqs,bshd->bhgqd", p, v_cache.astype(jnp.float32)) / l
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(params: Dict, caches: List, token: jax.Array, pos,
+                cfg: ModelConfig, mesh=None,
+                enc_out: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, List]:
+    """token (B, 1) int32 -> logits (B, vocab); updates caches."""
+    x = nn.apply_embedding(params["embed"], token).astype(jnp.dtype(cfg.dtype))
+    if cfg.name.startswith("gemma"):
+        x = x * (cfg.d_model ** 0.5)   # gemma scales embeddings (as forward)
+    new_caches = list(caches)
+    wins = [int(w) for w in window_schedule(cfg)] \
+        if cfg.family in ("dense", "moe") else []
+
+    if cfg.family in ("dense", "moe"):
+        dense_head = cfg.first_dense_layers if cfg.family == "moe" else 0
+        for li in range(cfg.n_layers):
+            if cfg.family == "moe" and li >= dense_head:
+                p = _layer_params(params["layers"], li - dense_head)
+            elif cfg.family == "moe":
+                p = _layer_params(params["dense_layers"], li)
+            else:
+                p = _layer_params(params["layers"], li)
+            h = _apply_norm(cfg, p["ln1"], x)
+            if cfg.mla:
+                a, new_caches[li] = apply_mla_decode(p["attn"], h,
+                                                     caches[li], pos,
+                                                     mla_config(cfg))
+            else:
+                a, new_caches[li] = _attn_decode(cfg, p["attn"], h,
+                                                 caches[li], pos, wins[li])
+            x = x + a
+            h = _apply_norm(cfg, p["ln2"], x)
+            if cfg.family == "moe" and li >= dense_head:
+                x = x + nn.apply_moe(p["moe"], h, moe_config(cfg), mesh=mesh)
+            else:
+                x = x + _apply_mlp(cfg, p["mlp"], h)
+
+    elif cfg.family == "ssm":
+        for li in range(cfg.n_layers):
+            p = _layer_params(params["layers"], li)
+            h = _apply_norm(cfg, p["ln1"], x)
+            y, new_caches[li] = apply_ssm_decode(p["ssm"], h, caches[li],
+                                                 ssm_config(cfg))
+            x = x + y
+
+    elif cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        shared = params["shared_block"]
+        g = 0
+        for li in range(cfg.n_layers):
+            p = _layer_params(params["layers"], li)
+            h = _apply_norm(cfg, p["ln1"], x)
+            y, new_caches[li] = apply_ssm_decode(p["ssm"], h, caches[li],
+                                                 ssm_config(cfg))
+            x = x + y
+            if (li + 1) % k == 0:
+                ci = cfg.n_layers + g
+                h = _apply_norm(cfg, shared["ln1"], x)
+                a, new_caches[ci] = _attn_decode(cfg, shared["attn"], h,
+                                                 caches[ci], pos, NO_WINDOW)
+                x = x + a
+                x = x + _apply_mlp(cfg, shared["mlp"],
+                                   _apply_norm(cfg, shared["ln2"], x))
+                g += 1
+
+    elif cfg.family == "encdec":
+        for li in range(cfg.dec_layers):
+            p = _layer_params(params["dec_layers"], li)
+            h = _apply_norm(cfg, p["ln1"], x)
+            a, new_caches[li] = _attn_decode(cfg, p["attn"], h, caches[li],
+                                             pos, NO_WINDOW)
+            x = x + a
+            h = _apply_norm(cfg, p["ln_x"], x)
+            q = nn.qkv_project(p["cross"], h, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim)[0]
+            Se = caches[li]["ck"].shape[1]
+            o = _masked_decode_attn(q, caches[li]["ck"], caches[li]["cv"],
+                                    jnp.ones((Se,), bool))
+            x = x + nn.out_project(p["cross"], o)
+            x = x + _apply_mlp(cfg, p["mlp"], _apply_norm(cfg, p["ln2"], x))
+    else:
+        raise ValueError(cfg.family)
+
+    x = _apply_norm(cfg, params["final_norm"], x)
+    logits = (nn.unembed(params["embed"], x) if cfg.tie_embeddings
+              else nn.apply_lm_head(params["lm_head"], x))
+    return logits[:, 0], new_caches

@@ -1,0 +1,49 @@
+"""Batched serving driver: greedy generation over the decode step.
+
+The prompt is teacher-forced through the same decode path (correct and
+simple — production prefill lives in the forward pass; see launch/specs.py
+prefill cells), then continuation tokens are sampled greedily.  The whole
+token loop is one lax.scan, so serving compiles to a single program.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.serve.decode import decode_step, init_caches
+
+
+def generate(params: Dict, cfg: ModelConfig, prompt: jax.Array,
+             max_new_tokens: int, max_seq: Optional[int] = None,
+             mesh=None) -> jax.Array:
+    """prompt: (B, P) int32 -> (B, P + max_new_tokens) greedy tokens."""
+    B, P = prompt.shape
+    total = P + max_new_tokens
+    max_seq = max_seq or total
+    caches = init_caches(cfg, B, max_seq)
+    tokens0 = jnp.concatenate(
+        [prompt, jnp.zeros((B, max_new_tokens), jnp.int32)], axis=1)
+
+    def body(carry, pos):
+        tokens, caches = carry
+        tok = jax.lax.dynamic_slice_in_dim(tokens, pos, 1, axis=1)
+        logits, caches = decode_step(params, caches, tok, pos, cfg, mesh=mesh)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # teacher-force inside the prompt, write greedy tokens after it
+        write_pos = pos + 1
+        keep = write_pos < P
+        cur = jax.lax.dynamic_slice_in_dim(tokens, jnp.minimum(write_pos,
+                                                               total - 1),
+                                           1, axis=1)[:, 0]
+        val = jnp.where(keep, cur, nxt)
+        tokens = jax.lax.dynamic_update_slice_in_dim(
+            tokens, val[:, None], jnp.minimum(write_pos, total - 1), axis=1)
+        return (tokens, caches), None
+
+    (tokens, _), _ = jax.lax.scan(body, (tokens0, caches),
+                                  jnp.arange(total - 1))
+    return tokens

@@ -1,0 +1,5 @@
+from repro.train.loop import InjectedFailure, TrainConfig, Trainer
+from repro.train.step import TrainState, cross_entropy, make_train_step
+
+__all__ = ["InjectedFailure", "TrainConfig", "Trainer", "TrainState",
+           "cross_entropy", "make_train_step"]

@@ -1,0 +1,8 @@
+from repro.utils.tree import (clip_by_global_norm, global_norm, param_bytes,
+                              param_count, tree_add, tree_cast, tree_scale,
+                              tree_sub, tree_zeros_like)
+
+__all__ = [
+    "clip_by_global_norm", "global_norm", "param_bytes", "param_count",
+    "tree_add", "tree_cast", "tree_scale", "tree_sub", "tree_zeros_like",
+]

@@ -1,0 +1,48 @@
+"""Shared fixtures.  NOTE: no XLA device-count flags here — smoke tests and
+benches must see the host's single device; multi-device tests spawn
+subprocesses with their own XLA_FLAGS (see tests/test_dist.py)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+@pytest.fixture(scope="session")
+def stall_db():
+    from repro.core import build_stall_table
+    return build_stall_table()
+
+
+@pytest.fixture(scope="session")
+def kernel_programs(stall_db):
+    """name -> -O3 baseline program for every kernel (first config)."""
+    from repro.kernels import KERNELS
+    from repro.sched import lower, schedule
+    out = {}
+    for name, kdef in KERNELS.items():
+        out[name] = schedule(lower(kdef.make_spec(kdef.configs[0])))
+    return out
+
+
+def run_in_subprocess(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run python code in a fresh process with a forced host device count."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n--- stdout ---\n"
+            f"{proc.stdout[-4000:]}\n--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_in_subprocess

@@ -1,0 +1,153 @@
+"""Distribution-layer tests.  Multi-device cases run in subprocesses with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main test process
+keeps the host's real (single-device) view."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.dist import sharding as shd
+
+
+def _abstract_mesh(shape, names):
+    return jax.sharding.AbstractMesh(tuple(shape), tuple(names))
+
+
+def test_logical_rules_divisibility_fallback():
+    mesh = _abstract_mesh((4,), ("model",))
+    spec = shd.spec_for_axes(("embed", "mlp"), mesh, (64, 32))
+    assert spec == jax.sharding.PartitionSpec(None, "model")
+    # non-divisible dims fall back to replication
+    spec = shd.spec_for_axes(("embed", "mlp"), mesh, (64, 30))
+    assert spec == jax.sharding.PartitionSpec(None, None)
+
+
+def test_param_shardings_tree_structure():
+    from repro.configs import get_config
+    from repro.models import lm
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = get_config("stablelm-3b", reduced=True)
+    sh = shd.param_shardings(lm.model_spec(cfg), mesh)
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    assert jax.tree.structure(sh) == jax.tree.structure(params)
+
+
+def test_cache_sharding_rules():
+    mesh = _abstract_mesh((2, 4), ("data", "model"))
+    # kv heads divisible by model -> head sharding
+    assert shd.cache_sharding(mesh, 8, 1024, 8)[2] == "model"
+    # kv=1 -> sequence sharding
+    spec = shd.cache_sharding(mesh, 8, 1024, 1)
+    assert spec[1] in ("model", ("model",))
+    # batch=1 long context -> sequence over data+model
+    spec = shd.cache_sharding(mesh, 1, 1024, 1)
+    assert spec[0] is None and set(spec[1]) == {"data", "model"}
+
+
+_MOE_EP_CODE = """
+import jax, jax.numpy as jnp, numpy as np
+from repro import nn
+from repro.nn.core import init_params
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = nn.MoEConfig(n_experts=8, top_k=2, d_model=32, d_ff=64,
+                   capacity_factor=8.0)  # no drops -> exact match
+p = init_params(nn.moe_spec(cfg), jax.random.PRNGKey(0))
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32))
+dense = nn.apply_moe_dense(p, x, cfg)
+from repro.nn.moe import apply_moe_ep, apply_moe_ep_replicated
+with mesh:
+    ep = apply_moe_ep(p, x, cfg, mesh)
+    rep = apply_moe_ep_replicated(p, x, cfg, mesh)
+np.testing.assert_allclose(np.asarray(ep), np.asarray(dense), atol=2e-4)
+np.testing.assert_allclose(np.asarray(rep), np.asarray(dense), atol=2e-4)
+print("MOE-EP-OK")
+"""
+
+
+def test_moe_ep_matches_dense(subproc):
+    out = subproc(_MOE_EP_CODE, n_devices=8)
+    assert "MOE-EP-OK" in out
+
+
+_GPIPE_CODE = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.dist.pipeline import gpipe
+mesh = jax.make_mesh((4,), ("pipe",))
+S, M, mb, d = 4, 8, 2, 16
+ws = jax.random.normal(jax.random.PRNGKey(0), (S, d, d)) / d**0.5
+def stage_fn(w, x):
+    return jnp.tanh(x @ w)
+x = jax.random.normal(jax.random.PRNGKey(1), (M, mb, d))
+with mesh:
+    y = gpipe(stage_fn, ws, x, mesh, axis="pipe")
+want = x
+for s in range(S):
+    want = jnp.tanh(want @ ws[s])
+np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-5)
+print("GPIPE-OK")
+"""
+
+
+def test_gpipe_matches_sequential(subproc):
+    out = subproc(_GPIPE_CODE, n_devices=4)
+    assert "GPIPE-OK" in out
+
+
+_COMPRESS_CODE = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.dist.compress import compressed_psum, ef_state
+mesh = jax.make_mesh((8,), ("pod",))
+g_global = jax.random.normal(jax.random.PRNGKey(0), (8, 64)) * 1e-3
+
+def step(g_shard, err):
+    return compressed_psum({"w": g_shard}, err, "pod")
+
+fn = jax.shard_map(step, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                   out_specs=(P(), P("pod")), check_vma=False)
+err = {"w": jnp.zeros((8, 64))}
+# accumulated error feedback: the *sum over steps* converges to the true
+# mean even though each step quantizes to bf16
+acc_c = np.zeros(64); acc_t = np.zeros(64)
+for i in range(20):
+    avg, err = fn(g_global, err)
+    acc_c += np.asarray(avg["w"]).reshape(-1)[:64]
+    acc_t += np.asarray(g_global.mean(axis=0))
+rel = np.abs(acc_c - acc_t).max() / (np.abs(acc_t).max() + 1e-12)
+assert rel < 0.02, rel
+print("COMPRESS-OK")
+"""
+
+
+def test_compressed_psum_error_feedback(subproc):
+    out = subproc(_COMPRESS_CODE, n_devices=8)
+    assert "COMPRESS-OK" in out
+
+
+_SHARDED_TRAIN_CODE = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.launch.specs import lowerable
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh(model=2)
+cfg = get_config("stablelm-3b", reduced=True)
+# run a REAL sharded train step (not just lowering) on the 8-device host
+from repro.models import lm
+from repro.optim import adamw as adamw_fn, constant_schedule
+from repro.train.step import TrainState, make_train_step
+from repro.data.pipeline import make_data
+params = lm.init_model(cfg, jax.random.PRNGKey(0))
+opt = adamw_fn(constant_schedule(1e-3))
+state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+batch = make_data(cfg, 16, 4).batch_at(0)
+with mesh:
+    step = jax.jit(make_train_step(cfg, opt, mesh=mesh))
+    state, m = step(state, batch)
+assert np.isfinite(float(m["loss"]))
+print("SHARDED-TRAIN-OK", float(m["loss"]))
+"""
+
+
+def test_sharded_train_step_runs(subproc):
+    out = subproc(_SHARDED_TRAIN_CODE, n_devices=8)
+    assert "SHARDED-TRAIN-OK" in out

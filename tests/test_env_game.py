@@ -1,0 +1,81 @@
+"""Assembly-game environment mechanics (§3.3–§3.6)."""
+
+import numpy as np
+import pytest
+
+from repro.core import AssemblyGame
+
+
+def test_reward_is_eq3(stall_db, kernel_programs):
+    env = AssemblyGame(kernel_programs["rmsnorm"], stall_db=stall_db)
+    env.reset()
+    va = env.valid_actions()
+    assert va
+    prev = env.prev_cycles
+    _, reward, _, info = env.step(va[0])
+    expected = (prev - info["cycles"]) / env.t0 * 100.0
+    assert reward == pytest.approx(expected)
+
+
+def test_episode_terminates_at_length(stall_db, kernel_programs):
+    env = AssemblyGame(kernel_programs["softmax"], stall_db=stall_db,
+                       episode_length=5)
+    env.reset()
+    rng = np.random.default_rng(0)
+    done = False
+    for t in range(5):
+        va = env.valid_actions()
+        if not va:
+            done = True
+            break
+        _, _, done, _ = env.step(int(rng.choice(va)))
+    assert done
+
+
+def test_best_survives_reset(stall_db, kernel_programs):
+    env = AssemblyGame(kernel_programs["ssd"], stall_db=stall_db,
+                       episode_length=30)
+    rng = np.random.default_rng(0)
+    env.reset()
+    for _ in range(30):
+        va = env.valid_actions()
+        if not va:
+            break
+        env.step(int(rng.choice(va)))
+    best_after_ep1 = env.best_cycles
+    env.reset()
+    assert env.best_cycles <= best_after_ep1
+
+
+def test_invalid_action_raises(stall_db, kernel_programs):
+    env = AssemblyGame(kernel_programs["rmsnorm"], stall_db=stall_db)
+    env.reset()
+    mask = env.action_mask()
+    invalid = int(np.argmin(mask))
+    if mask[invalid] == 0:
+        with pytest.raises(ValueError):
+            env.step(invalid)
+
+
+def test_slot_positions_track_instructions(stall_db, kernel_programs):
+    env = AssemblyGame(kernel_programs["flash_attention"], stall_db=stall_db)
+    env.reset()
+    # every slot's position must point at a schedulable memory instruction
+    for k, pos in env.slot_pos.items():
+        assert env.program[pos].is_schedulable()
+    rng = np.random.default_rng(4)
+    for _ in range(20):
+        va = env.valid_actions()
+        if not va:
+            break
+        env.step(int(rng.choice(va)))
+    for k, pos in env.slot_pos.items():
+        assert env.program[pos].is_schedulable()
+
+
+def test_obs_shapes_and_mask(stall_db, kernel_programs):
+    env = AssemblyGame(kernel_programs["bmm"], stall_db=stall_db)
+    obs = env.reset()
+    assert obs["state"].shape == (env.n, env.feature_dim)
+    assert obs["mask"].shape == (env.num_actions,)
+    assert set(np.unique(obs["mask"])) <= {0.0, 1.0}

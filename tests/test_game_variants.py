@@ -1,0 +1,63 @@
+"""Beyond-paper game variants (DESIGN.md §2.2): warm starts and macro moves
+inherit the masking safety guarantees unchanged."""
+
+import numpy as np
+
+from repro.core import AssemblyGame, Machine
+from repro.core.machine import dataflow_reference
+
+
+def test_macro_moves_preserve_semantics(stall_db, kernel_programs):
+    prog = kernel_programs["fused_ff"]
+    env = AssemblyGame(prog, stall_db=stall_db, episode_length=64,
+                       hop_sizes=(1, 4, 16))
+    assert env.num_actions == 2 * env.m * 3
+    rng = np.random.default_rng(0)
+    for seed in range(2):
+        ref = dataflow_reference(prog, input_seed=seed)
+        env.reset()
+        for _ in range(50):
+            va = env.valid_actions()
+            if not va:
+                break
+            env.step(int(rng.choice(va)))
+        got = Machine().run(env.program, input_seed=seed).outputs
+        assert got == ref
+
+
+def test_macro_move_applies_multiple_hops(stall_db, kernel_programs):
+    env = AssemblyGame(kernel_programs["fused_ff"], stall_db=stall_db,
+                       episode_length=32, hop_sizes=(1, 8))
+    env.reset()
+    rng = np.random.default_rng(1)
+    hop_counts = []
+    for _ in range(30):
+        va = env.valid_actions()
+        big = [a for a in va if a % 2 == 1]   # hop index 1 (=8 hops)
+        if not big:
+            break
+        env.step(int(rng.choice(big)))
+        hop_counts.append(env.history[-1].hops)
+    assert hop_counts and max(hop_counts) > 1
+
+
+def test_warm_start_resumes_from_best(stall_db, kernel_programs):
+    prog = kernel_programs["rmsnorm"]
+    env = AssemblyGame(prog, stall_db=stall_db, episode_length=20,
+                       warm_start=True)
+    env.reset()
+    rng = np.random.default_rng(2)
+    for _ in range(20):
+        va = env.valid_actions()
+        if not va:
+            break
+        env.step(int(rng.choice(va)))
+    best_prog = list(env.best_program)
+    t0 = env.t0
+    env.reset()
+    # episode restarts from the incumbent best, Eq.3 T_0 stays pinned
+    assert [id(i) for i in env.program] == [id(i) for i in best_prog]
+    assert env.t0 == t0
+    # and semantics still intact from the warm-started state
+    ref = dataflow_reference(prog)
+    assert Machine().run(env.program).outputs == ref

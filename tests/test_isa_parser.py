@@ -1,0 +1,77 @@
+"""Parser/ISA unit tests: text round-trip, Eq. (2) operand expansion,
+control codes, memory effects."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.isa import Control, Instruction, program_text
+from repro.core.parser import (adjacent_register, expand_register,
+                               memory_effects, parse_line, parse_program)
+
+
+def test_adjacent_register_matches_paper_eq2():
+    # base = n//2; mod = n%2; flip = 1-mod; adj = base*2 + flip
+    assert adjacent_register(10) == 11
+    assert adjacent_register(11) == 10
+    assert adjacent_register(0) == 1
+    assert adjacent_register(219) == 218
+
+
+@given(st.integers(min_value=0, max_value=254))
+def test_adjacent_register_is_involution_and_pairs(n):
+    adj = adjacent_register(n)
+    assert adjacent_register(adj) == n
+    assert abs(adj - n) == 1
+    assert {n, adj} == {2 * (n // 2), 2 * (n // 2) + 1}
+
+
+def test_expand_register_64_suffix():
+    assert expand_register("R10.64") == frozenset({"R10", "R11"})
+    assert expand_register("R11.64") == frozenset({"R10", "R11"})
+    assert expand_register("R7") == frozenset({"R7"})
+    assert expand_register("RZ") == frozenset()
+    assert expand_register("desc[UR16][R44.64]") == \
+        frozenset({"UR16", "R44", "R45"})
+
+
+def test_parse_line_full_syntax():
+    line = ("[B--2---:R1:W3:Y:S04] @!PT CPYIN.4096 [UR2+0x4000], "
+            "desc[UR16][R10.64] ; // tile=in_a:2 grp=7")
+    ins = parse_line(line)
+    assert ins.ctrl.wait_mask == frozenset({2})
+    assert ins.ctrl.read_bar == 1 and ins.ctrl.write_bar == 3
+    assert ins.ctrl.yield_flag and ins.ctrl.stall == 4
+    assert ins.pred == "@!PT" and ins.predicated_off()
+    assert ins.base == "CPYIN" and ins.opcode == "CPYIN.4096"
+    assert ins.tile == ("in_a", 2) and ins.group == 7
+    assert "R10" in ins.uses and "R11" in ins.uses and "UR16" in ins.uses
+
+
+def test_roundtrip_preserves_program(kernel_programs):
+    for name, prog in kernel_programs.items():
+        text = program_text(prog)
+        re_prog = parse_program(text)
+        assert program_text(re_prog) == text, name
+        for a, b in zip(prog, re_prog):
+            assert a.defs == b.defs and a.uses == b.uses
+            assert a.tile == b.tile and a.group == b.group
+
+
+def test_memory_effects_cpyout_reads_vmem_writes_hbm():
+    ins = parse_line("[B------:R0:W-:-:S01] CPYOUT.4096 "
+                     "desc[UR16][R8.64+0x0], R40 ; // tile=out_y:0")
+    eff = dict(memory_effects(ins))
+    assert eff[("tile", "out_y", 0)] is False          # VMEM read
+    writes = [c for c, w in memory_effects(ins) if w]
+    assert len(writes) == 1 and writes[0][0] == "addr"  # HBM write
+
+
+def test_mxm_accumulator_is_read_modify_write():
+    ins = parse_line("[B------:R-:W-:-:S02] MXM R200, R33.reuse, R35 ;")
+    assert "R200" in ins.defs and "R200" in ins.uses
+    assert "R33" in ins.uses and "R35" in ins.uses
+
+
+def test_unknown_opcode_rejected():
+    with pytest.raises(ValueError):
+        parse_line("[B------:R-:W-:-:S01] FROB R1, R2 ;")

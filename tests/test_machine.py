@@ -1,0 +1,95 @@
+"""Machine-model tests: determinism, microbenchmark recovery of the hidden
+latency table, stale-read semantics, counters."""
+
+import pytest
+
+from repro.core import Machine, build_stall_table, clock_based_estimate
+from repro.core.machine import dataflow_reference, true_fixed_latency
+from repro.core.microbench import DEFAULT_BENCH_OPS, measure_stall_count
+from repro.core.parser import parse_program
+
+_PROG = """
+[B------:R-:W-:-:S08] SMOV R2, 0x7 ;
+[B------:R-:W-:-:S08] SMOV R4, 0x9 ;
+[B------:R-:W-:-:S04] SADD R6, R2, R4 ;
+[B------:R0:W-:-:S08] STV [R90], R6 ;
+[B------:R1:W-:-:S08] CPYOUT.64 [OUT0], R6 ;
+[B------:R-:W-:-:S01] EXIT ;
+"""
+
+
+def test_run_deterministic():
+    prog = parse_program(_PROG)
+    m = Machine()
+    r1, r2 = m.run(prog), m.run(prog)
+    assert r1.cycles == r2.cycles and r1.outputs == r2.outputs
+
+
+def test_input_seed_changes_values_not_cycles():
+    prog = parse_program(_PROG)
+    m = Machine()
+    a, b = m.run(prog, input_seed=0), m.run(prog, input_seed=1)
+    assert a.cycles == b.cycles
+    assert a.outputs != b.outputs
+
+
+def test_stale_read_on_violated_stall():
+    """Post-Kepler semantics: shrinking the producer's stall below its
+    latency corrupts the consumer's value (no hardware interlock)."""
+    ok = parse_program(_PROG)
+    bad = parse_program(_PROG.replace("S04] SADD", "S01] SADD"))
+    ref = dataflow_reference(ok)
+    m = Machine()
+    assert m.run(ok).outputs == ref
+    assert m.run(bad).outputs != ref
+
+
+def test_microbench_recovers_hidden_table():
+    """Dependency-based microbenchmarking (§4.3) recovers the private
+    latency table exactly — the test is the only licensed peeker."""
+    table = build_stall_table()
+    for op in DEFAULT_BENCH_OPS:
+        assert table[op] == true_fixed_latency(op), op
+    assert "SADDX" not in table  # left to the inference pass (§3.2)
+
+
+def test_clock_based_underestimates():
+    """Listing 7's negative result: clock reads don't wait for completion."""
+    clock = clock_based_estimate("SADD")
+    assert clock < true_fixed_latency("SADD")
+
+
+def test_wide_op_is_slower():
+    assert measure_stall_count("SMULW") == 5
+    assert measure_stall_count("SMUL") == 4
+
+
+def test_counters_and_noise(kernel_programs):
+    prog = kernel_programs["rmsnorm"]
+    res = Machine().run(prog)
+    c = res.counters
+    assert c["cpyin"] > 0 and c["cpyout"] > 0 and c["ldv"] > 0
+    assert c["dma_bytes_in"] > 0 and 0 < c["ipc"] <= 1.0
+    noisy = Machine(noise=0.05, seed=1).run(prog)
+    assert noisy.cycles != res.cycles
+    assert abs(noisy.cycles - res.cycles) / res.cycles < 0.5
+
+
+def test_reuse_buffer_rewards_backtoback_mxm():
+    base = """
+[B------:R-:W-:-:S08] SMOV R10, 0x1 ;
+[B------:R-:W-:-:S08] SMOV R12, 0x2 ;
+[B------:R-:W-:-:S08] MXM R200, R10, R12 ;
+{MID}
+[B------:R-:W-:-:S08] MXM R201, R10.reuse, R12 ;
+[B------:R0:W-:-:S08] CPYOUT.64 [OUT0], R201 ;
+[B------:R-:W-:-:S01] EXIT ;
+"""
+    together = parse_program(base.replace("{MID}", ""))
+    split = parse_program(base.replace(
+        "{MID}", "[B------:R-:W2:-:S08] CPYIN.64 [UR2+0x0], "
+                 "desc[UR16][R20.64] ; // tile=in_x:0"))
+    m = Machine()
+    hits_together = m.run(together).counters["mxm_reuse_hits"]
+    hits_split = m.run(split).counters["mxm_reuse_hits"]
+    assert hits_together == 1 and hits_split == 0

@@ -1,0 +1,137 @@
+"""NN substrate numerics: attention variants, MoE, MLA, SSM."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn
+from repro.kernels import ref
+from repro.nn.core import init_params
+
+
+def _keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+def test_chunked_attention_matches_oracle():
+    B, S, H, KH, D = 2, 256, 8, 2, 32
+    ks = _keys(3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KH, D))
+    v = jax.random.normal(ks[2], (B, S, KH, D))
+    out = nn.chunked_attention(q, k, v, causal=True, chunk=64)
+    kr = jnp.repeat(k, H // KH, axis=2).transpose(0, 2, 1, 3)
+    vr = jnp.repeat(v, H // KH, axis=2).transpose(0, 2, 1, 3)
+    want = ref.flash_attention(q.transpose(0, 2, 1, 3), kr, vr,
+                               causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_sliding_window_attention(window):
+    B, S, H, D = 1, 128, 4, 16
+    ks = _keys(3, 1)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    out = nn.chunked_attention(q, k, v, causal=True, window=window, chunk=32)
+    # oracle with an explicit banded mask
+    qf = q.transpose(0, 2, 1, 3) * D ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, k.transpose(0, 2, 1, 3))
+    pos = jnp.arange(S)
+    mask = (pos[None, :] <= pos[:, None]) & (pos[None, :] > pos[:, None] - window)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    want = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(logits, -1),
+                      v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_decode_attention_matches_prefill_column():
+    B, S, H, KH, D = 2, 96, 8, 4, 16
+    ks = _keys(3, 2)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KH, D))
+    v = jax.random.normal(ks[2], (B, S, KH, D))
+    full = nn.chunked_attention(q, k, v, causal=True, chunk=32)
+    for pos in (0, 31, 95):
+        od = nn.decode_attention(q[:, pos:pos + 1], k, v, pos)
+        np.testing.assert_allclose(np.asarray(od[:, 0]),
+                                   np.asarray(full[:, pos]), atol=2e-5)
+
+
+def test_update_cache_touches_one_position():
+    cache = jnp.zeros((2, 16, 4, 8))
+    new = jnp.ones((2, 1, 4, 8))
+    out = nn.update_cache(cache, new, 5)
+    assert float(out[:, 5].sum()) == 2 * 4 * 8
+    assert float(out.sum()) == 2 * 4 * 8
+
+
+def test_moe_dense_routing_is_topk():
+    cfg = nn.MoEConfig(n_experts=8, top_k=2, d_model=16, d_ff=32)
+    p = init_params(nn.moe_spec(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+    from repro.nn.moe import router_probs
+    gate_vals, gate_idx, probs = router_probs(p, x, cfg)
+    assert gate_idx.shape == (2, 8, 2)
+    np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, atol=1e-5)
+    y = nn.apply_moe_dense(p, x, cfg)
+    assert y.shape == x.shape and bool(jnp.isfinite(y).all())
+
+
+def test_moe_shared_experts_added():
+    cfg = nn.MoEConfig(n_experts=4, top_k=1, d_model=16, d_ff=32,
+                       n_shared=1, shared_d_ff=32)
+    p = init_params(nn.moe_spec(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 16))
+    y = nn.apply_moe_dense(p, x, cfg)
+    # zeroing the shared expert changes the output
+    p2 = jax.tree.map(lambda a: a, p)
+    p2["shared"] = jax.tree.map(jnp.zeros_like, p["shared"])
+    y2 = nn.apply_moe_dense(p2, x, cfg)
+    assert not np.allclose(np.asarray(y), np.asarray(y2))
+
+
+def test_mla_decode_equals_train():
+    cfg = nn.MLAConfig(d_model=64, n_heads=4, kv_lora_rank=32,
+                       qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16)
+    p = init_params(nn.mla_spec(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 64)) * 0.5
+    y_train = nn.apply_mla(p, x, cfg, chunk=5)
+    cache = nn.init_mla_cache(cfg, 2, 10, dtype=jnp.float32)
+    outs = []
+    for t in range(10):
+        yt, cache = nn.apply_mla_decode(p, x[:, t:t + 1], cache, t, cfg)
+        outs.append(yt)
+    np.testing.assert_allclose(np.asarray(y_train),
+                               np.asarray(jnp.concatenate(outs, 1)),
+                               atol=3e-5)
+
+
+def test_ssm_decode_equals_parallel():
+    cfg = nn.SSMConfig(d_model=32, d_inner=64, n_heads=4, head_p=16,
+                       n_groups=2, d_state=16)
+    p = init_params(nn.ssm_spec(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 32)) * 0.5
+    y_par = nn.apply_ssm(p, x, cfg)
+    cache = nn.init_ssm_cache(cfg, 2)
+    outs = []
+    for t in range(12):
+        yt, cache = nn.apply_ssm_decode(p, x[:, t:t + 1], cache, cfg)
+        outs.append(yt)
+    np.testing.assert_allclose(np.asarray(y_par),
+                               np.asarray(jnp.concatenate(outs, 1)),
+                               atol=3e-5)
+
+
+def test_rope_relative_property():
+    """Attention logits under RoPE depend only on relative positions."""
+    D = 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, D))
+    def logit(qp, kp):
+        qr = nn.apply_rope(q, jnp.array([[qp]]))
+        kr = nn.apply_rope(k, jnp.array([[kp]]))
+        return float(jnp.sum(qr * kr))
+    assert logit(5, 3) == pytest.approx(logit(105, 103), abs=1e-4)

@@ -1,0 +1,76 @@
+"""PPO component tests: GAE vs numpy reference, masked sampling, learning
+on a tiny budget."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ppo import (PPOConfig, compute_gae, init_agent,
+                            masked_entropy, masked_log_probs, policy_value,
+                            sample_action)
+
+
+def _gae_numpy(rewards, values, dones, last_value, gamma, lam):
+    T, B = rewards.shape
+    adv = np.zeros((T, B), np.float32)
+    next_adv = np.zeros(B, np.float32)
+    next_val = last_value
+    for t in range(T - 1, -1, -1):
+        nonterm = 1.0 - dones[t]
+        delta = rewards[t] + gamma * next_val * nonterm - values[t]
+        next_adv = delta + gamma * lam * nonterm * next_adv
+        adv[t] = next_adv
+        next_val = values[t]
+    return adv, adv + values
+
+
+def test_gae_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    T, B = 17, 5
+    rewards = rng.standard_normal((T, B)).astype(np.float32)
+    values = rng.standard_normal((T, B)).astype(np.float32)
+    dones = (rng.random((T, B)) < 0.15).astype(np.float32)
+    last = rng.standard_normal(B).astype(np.float32)
+    adv, ret = compute_gae(rewards, values, dones, last, 0.99, 0.95)
+    adv_np, ret_np = _gae_numpy(rewards, values, dones, last, 0.99, 0.95)
+    np.testing.assert_allclose(np.asarray(adv), adv_np, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ret), ret_np, atol=1e-5)
+
+
+def test_masked_sampling_never_invalid():
+    key = jax.random.PRNGKey(0)
+    params = init_agent(key, n_rows=40, feat_dim=12, num_actions=10)
+    state = jax.random.normal(key, (16, 40, 12))
+    mask = np.zeros((16, 10), np.float32)
+    mask[:, [1, 4, 7]] = 1.0
+    for s in range(5):
+        a, logp, v = sample_action(params, jax.random.PRNGKey(s), state,
+                                   jnp.asarray(mask))
+        assert set(np.asarray(a).tolist()) <= {1, 4, 7}
+        assert np.isfinite(np.asarray(logp)).all()
+
+
+def test_masked_entropy_bounds():
+    logits = jnp.zeros((4, 8))
+    mask = jnp.asarray(np.tile([1, 1, 1, 1, 0, 0, 0, 0], (4, 1)),
+                       jnp.float32)
+    ent = masked_entropy(logits, mask)
+    np.testing.assert_allclose(np.asarray(ent), np.log(4.0), atol=1e-5)
+
+
+def test_ppo_learns_on_kernel(stall_db, kernel_programs):
+    """A small budget must already raise episodic return above the initial
+    (near-zero) level — the qualitative Fig. 8 claim."""
+    from repro.core.game import train_on_program
+    cfg = PPOConfig(total_timesteps=2048, num_envs=4, num_steps=64,
+                    episode_length=48, seed=0)
+    res = train_on_program(kernel_programs["rmsnorm"], stall_db=stall_db,
+                           cfg=cfg)
+    assert res.best_cycles <= res.baseline_cycles
+    assert res.improvement >= 0.0
+    assert len(res.stats) == cfg.num_updates
+    for row in res.stats:
+        assert np.isfinite(row["approx_kl"]) and np.isfinite(row["entropy"])
+    # learning signal: the last update's return exceeds the first's
+    assert res.stats[-1]["episodic_return"] >= res.stats[0]["episodic_return"]

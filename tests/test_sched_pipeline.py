@@ -1,0 +1,108 @@
+"""Compiler-integration pipeline: lowering validity, baseline quality,
+autotune, cache round-trip, probabilistic testing, end-to-end optimize."""
+
+import numpy as np
+import pytest
+
+from repro.core import Machine, analyze
+from repro.core.machine import dataflow_reference
+from repro.core.ppo import PPOConfig
+from repro.kernels import KERNELS
+from repro.sched import (CuAsmRL, autotune, cache, lower, naive_schedule,
+                         probabilistic_test, schedule)
+
+
+@pytest.mark.parametrize("name", list(KERNELS))
+def test_baseline_schedule_is_valid(name, stall_db):
+    kdef = KERNELS[name]
+    lk = lower(kdef.make_spec(kdef.configs[0]))
+    o3 = schedule(lk)
+    nv = naive_schedule(lk)
+    # both schedules compute the same dataflow result, timed correctly
+    for seed in range(2):
+        ref = dataflow_reference(nv, input_seed=seed)
+        assert Machine().run(o3, input_seed=seed).outputs == ref, name
+        assert Machine().run(nv, input_seed=seed).outputs == ref, name
+
+
+@pytest.mark.parametrize("name", list(KERNELS))
+def test_baseline_beats_naive(name):
+    kdef = KERNELS[name]
+    lk = lower(kdef.make_spec(kdef.configs[0]))
+    m = Machine()
+    naive = m.run(naive_schedule(lk)).cycles
+    windowed = m.run(schedule(lk)).cycles          # the ptxas stand-in
+    unbounded = m.run(schedule(lk, window=None)).cycles
+    assert windowed <= naive * 1.01, (name, windowed, naive)
+    assert unbounded < naive, (name, unbounded, naive)
+    assert unbounded <= windowed
+
+
+def test_lowering_structure(stall_db):
+    kdef = KERNELS["flash_attention"]
+    prog = schedule(lower(kdef.make_spec(kdef.configs[0])))
+    bases = [i.base for i in prog]
+    assert "MXM" in bases and "CPYIN" in bases and "CPYOUT" in bases
+    assert any(i.predicated_off() for i in prog)          # @!PT slots
+    # .reuse hints appear on dense MXM bursts (matmul kernel)
+    mm = schedule(lower(KERNELS["matmul_leakyrelu"].make_spec(
+        {"bm": 256, "bn": 128, "bk": 64})))
+    assert any(".reuse" in op for i in mm for op in i.operands)
+    ana = analyze(prog, stall_db)
+    fr = ana.resolution_fractions()
+    assert fr["denylist"] > 0                              # Fig. 7 classes
+    assert fr["db"] > 0 and fr["infer"] > 0
+
+
+def test_autotune_selects_best_throughput():
+    kdef = KERNELS["matmul_leakyrelu"]
+    res = autotune(kdef.make_spec, kdef.configs)
+    assert len(res.entries) == len(kdef.configs)
+    assert res.best.work_per_cycle == max(e.work_per_cycle
+                                          for e in res.entries)
+
+
+def test_cache_roundtrip(tmp_path, kernel_programs):
+    prog = kernel_programs["softmax"]
+    art = cache.Artifact(kernel="softmax", target="test-target",
+                         config={"br": 8, "cols": 4096}, program=prog,
+                         baseline_cycles=100.0, optimized_cycles=90.0,
+                         meta={"note": "x"})
+    cache.save(art, str(tmp_path))
+    back = cache.load("softmax", "test-target", {"br": 8, "cols": 4096},
+                      str(tmp_path))
+    assert back is not None and back.speedup == pytest.approx(100.0 / 90.0)
+    from repro.core.isa import program_text
+    assert program_text(back.program) == program_text(prog)
+    assert cache.load("softmax", "other", {"br": 8, "cols": 4096},
+                      str(tmp_path)) is None
+
+
+def test_probabilistic_testing_catches_corruption(kernel_programs):
+    prog = kernel_programs["rmsnorm"]
+    ok = probabilistic_test(prog, prog, n_seeds=3)
+    assert ok.ok
+    # force an illegal reorder: swap a dependent pair by hand
+    bad = list(prog)
+    idx = next(i for i in range(1, len(bad))
+               if (bad[i - 1].defs or frozenset()) & (bad[i].uses or frozenset()))
+    bad[idx - 1], bad[idx] = bad[idx], bad[idx - 1]
+    res = probabilistic_test(prog, bad, n_seeds=3)
+    assert not res.ok and res.failures
+
+
+def test_cuasmrl_optimize_and_deploy(tmp_path, stall_db):
+    """End-to-end §4.2 workflow on a tiny PPO budget: optimize -> cached
+    artifact -> deploy-time lookup without training."""
+    kdef = KERNELS["rmsnorm"]
+    ppo = PPOConfig(total_timesteps=512, num_envs=4, num_steps=32,
+                    episode_length=24, seed=0)
+    opt = CuAsmRL(kdef, ppo=ppo, cache_dir=str(tmp_path), stall_db=stall_db,
+                  verify_seeds=2)
+    art = opt.optimize()
+    assert art.optimized_cycles <= art.baseline_cycles
+    art2 = opt.deploy()
+    assert art2.optimized_cycles == art.optimized_cycles
+    # second optimize() call is a cache hit (no retraining)
+    art3 = opt.optimize()
+    assert art3.optimized_cycles == art.optimized_cycles

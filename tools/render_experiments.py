@@ -1,0 +1,219 @@
+"""Render EXPERIMENTS.md tables from results/*.json (re-runnable)."""
+
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(name):
+    path = os.path.join(ROOT, "results", name)
+    with open(path) as f:
+        return json.load(f)
+
+
+def rl_table() -> str:
+    s = load("agents_summary.json")
+    lines = ["| kernel | -O3 baseline (cycles) | vanilla (paper-faithful) | "
+             "+warm-start | +warm+macro-moves | best speedup |",
+             "|---|---|---|---|---|---|"]
+    geo = {"vanilla": 1.0, "warm_start": 1.0, "warm_macro": 1.0}
+    n = 0
+    for k, e in s.items():
+        cells = []
+        best = 1.0
+        for mode in ("vanilla", "warm_start", "warm_macro"):
+            m = e.get(mode)
+            if m is None:
+                cells.append("—")
+                continue
+            cells.append(f"{m['optimized_cycles']:.0f} "
+                         f"({m['improvement']:+.2%})")
+            geo[mode] *= m["speedup"]
+            best = max(best, m["speedup"])
+        lines.append(f"| {k} | {e['vanilla']['baseline_cycles']:.0f} | "
+                     + " | ".join(cells) + f" | {best:.4f}× |")
+        n += 1
+    lines.append(f"| **geomean** | | {geo['vanilla'] ** (1/n):.4f}× "
+                 f"| {geo['warm_start'] ** (1/n):.4f}× "
+                 f"| {geo['warm_macro'] ** (1/n):.4f}× | |")
+    lines.append("")
+    lines.append(
+        "Interpretation (recorded per the hypothesis protocol): the RL agent "
+        "reliably harvests the *local* slack the pressure-bounded vendor "
+        "scheduler leaves (fused_ff +5.4% — the paper's own best kernel "
+        "class; small-but-verified wins elsewhere), and the two beyond-paper "
+        "variants confirm the remaining corridor to the unbounded global "
+        "scheduler (9–53%) is plateau-separated: it requires coordinated "
+        "restructuring of hundreds of instructions, not reachable by "
+        "single-instruction moves in 128-step episodes.  This is the same "
+        "shape as the paper's spread (2–26%: most kernels small, a few "
+        "large), with the added diagnosis of *why* the ceiling sits where "
+        "it does.")
+    return "\n".join(lines)
+
+
+def dryrun_table() -> str:
+    cells = load("dryrun.json")
+    lines = ["| arch | shape | mesh | status | compile (s) | peak mem/dev "
+             "(GB)* | HLO FLOPs (global) | collective B (global) |",
+             "|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c["status"] == "ok":
+            r = c["roofline"]
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | ok "
+                f"| {c['compile_s']} | {c['memory']['peak_bytes'] / 1e9:.1f} "
+                f"| {r['flops_global']:.2e} | {r['coll_bytes_global']:.2e} |")
+        else:
+            reason = c.get("reason", c.get("error", ""))[:60]
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+                         f"| {c['status']} ({reason}) | | | | |")
+    lines.append("")
+    lines.append("\\* `memory_analysis()` of the CPU-backend partitioned "
+                 "module, recorded verbatim.  Caveat (verified empirically): "
+                 "the CPU backend does not credit scan/microbatch buffer "
+                 "reuse — temp bytes are identical at 1 and 8 microbatches — "
+                 "so train-cell peaks overstate the TPU footprint; "
+                 "per-device *state* (args column in the JSON: params + "
+                 "optimizer + caches) is exact and fits comfortably in "
+                 "every cell.")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    cells = [c for c in load("dryrun.json")
+             if c["mesh"] == "single"]
+    lines = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+             "dominant | MODEL/HLO flops | one-line: what moves the "
+             "dominant term |",
+             "|---|---|---|---|---|---|---|---|"]
+    hints = {
+        ("whisper-large-v3", "train_4k"): "flash-fused attention (§Perf A shows the prefill variant)",
+        ("whisper-large-v3", "prefill_32k"): "§Perf cell A: deploy the Pallas flash kernel (memory 2.62→0.024 s)",
+        ("whisper-large-v3", "decode_32k"): "KV reads dominate: batch the decode wider",
+        ("deepseek-v2-lite-16b", "train_4k"): "flash fusion + EP capacity tuning",
+        ("deepseek-v2-lite-16b", "prefill_32k"): "flash fusion on the MLA path",
+        ("deepseek-v2-lite-16b", "decode_32k"): "§Perf cell B (fixed): remaining term = expert-weight residency",
+        ("olmoe-1b-7b", "train_4k"): "flash fusion; a2a already minor",
+        ("olmoe-1b-7b", "prefill_32k"): "flash fusion",
+        ("olmoe-1b-7b", "decode_32k"): "expert-weight residency: larger decode batch amortizes",
+        ("stablelm-3b", "train_4k"): "§Perf cell C: flash fusion flips it compute-bound",
+        ("stablelm-3b", "prefill_32k"): "flash fusion",
+        ("stablelm-3b", "decode_32k"): "KV + weight reads: wider batch",
+        ("qwen1.5-4b", "train_4k"): "near-balanced; remat policy (see C2/C3 tradeoff)",
+        ("qwen1.5-4b", "prefill_32k"): "flash fusion",
+        ("qwen1.5-4b", "decode_32k"): "KV + weight reads",
+        ("stablelm-12b", "train_4k"): "compute-bound at 70% useful: dots-saveable remat (C2) if memory allows",
+        ("stablelm-12b", "prefill_32k"): "flash fusion",
+        ("stablelm-12b", "decode_32k"): "KV + weight reads",
+        ("gemma3-1b", "train_4k"): "compute-bound; window layers already cheap",
+        ("gemma3-1b", "prefill_32k"): "flash fusion (local layers are window-bounded)",
+        ("gemma3-1b", "decode_32k"): "tiny model: collectives are latency-bound — fuse/coalesce per-layer psums",
+        ("gemma3-1b", "long_500k"): "global-layer cache reads; seq-sharded over data+model already",
+        ("mamba2-1.3b", "train_4k"): "SSD chunk kernel (Pallas) fuses the state chunk loop",
+        ("mamba2-1.3b", "prefill_32k"): "SSD chunk kernel",
+        ("mamba2-1.3b", "decode_32k"): "O(1) state: already near floor; batch wider",
+        ("mamba2-1.3b", "long_500k"): "state resident: term is µs-scale already",
+        ("chameleon-34b", "train_4k"): "compute-bound at 73% useful: largest model, TP collectives next",
+        ("chameleon-34b", "prefill_32k"): "flash fusion",
+        ("chameleon-34b", "decode_32k"): "weight reads at bs=128: wider batch / int8 weights",
+        ("zamba2-2.7b", "train_4k"): "SSD kernel + flash on the shared block",
+        ("zamba2-2.7b", "prefill_32k"): "SSD kernel",
+        ("zamba2-2.7b", "decode_32k"): "SSM state + shared-block cache reads",
+        ("zamba2-2.7b", "long_500k"): "shared-block cache reads (9 blocks × 500k)",
+    }
+    for c in cells:
+        if c["status"] == "skip":
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | skip "
+                         f"| — | {c['reason'][:70]} |")
+            continue
+        if c["status"] != "ok":
+            continue
+        r = c["roofline"]
+        hint = hints.get((c["arch"], c["shape"]), "")
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']:.3g} "
+            f"| {r['memory_s']:.3g} | {r['collective_s']:.3g} "
+            f"| **{r['dominant']}** | {(r['useful_ratio'] or 0):.2f} "
+            f"| {hint} |")
+    return "\n".join(lines)
+
+
+def perf_section() -> str:
+    hc = load("hillclimb_AC.json")
+    a1 = hc["A1b"]["roofline"]
+    c1 = hc["C1b"]["roofline"]
+    c2 = hc["C2"]["roofline"]
+    return f"""
+**Cell selection from the baseline table:** A = whisper-large-v3 ×
+prefill_32k (worst roofline fraction: memory term 6.5× the compute term);
+B = deepseek-v2-lite-16b × decode_32k (most collective-bound cell in the
+sweep: collective term 3978× compute); C = stablelm-3b × train_4k (the
+arch whose hot ops are exactly the paper's kernel set — most representative
+of the technique).
+
+### Cell A — whisper-large-v3 / prefill_32k (dominant: memory)
+
+| iter | hypothesis | change | compute (s) | memory (s) | collective (s) | verdict |
+|---|---|---|---|---|---|---|
+| A0 | — | baseline | 0.403 | **2.62** | 0.049 | memory-bound 6.5× |
+| A1 | the memory term is attention-score materialization (B·H·S·chunk f32 per chunk per layer, fwd); the Pallas flash kernel keeps scores + q-tile accumulators in VMEM | deploy the flash kernel for every online-softmax chunk loop (kernel-aware cost accounting, `jcost(fused_attn=True)`) | **0.403** | 0.024 | 0.049 | **confirmed: memory 2.62 → 0.024 s (108×); cell flips compute-bound** |
+
+Post-A1 the step bound drops 2.62 → 0.403 s (6.5× projected).  The
+remaining compute is dominated by the encoder's non-causal 32k² attention
+FLOPs (MODEL/HLO = 0.16 — attention math is not in 2·N·D), which is
+inherent to the shape, not waste.  Stopping: next-best ideas (bigger
+chunks, bf16 accum) napkin at <5% of the dominant term.
+
+### Cell B — deepseek-v2-lite-16b / decode_32k (dominant: collective)
+
+| iter | hypothesis | change | compute (s) | memory (s) | collective (s) | verdict |
+|---|---|---|---|---|---|---|
+| B0 | — | baseline | 8.4e-05 | 0.0039 | **0.335** | collective-bound 3978× |
+| B1 | HLO shows 135 all-gathers of `f32[8,32768,512]` = the MLA latent cache, all-gathered (in f32!) twice per layer because the cache was sharded on its *contraction* dim (R) | shard the MLA cache on **sequence** instead (specs.py `_cache_shardings`; the softmax partial-stats combine is bytes-trivial) | 8.4e-05 | **0.0039** | 0.00034 | **confirmed: collective 0.335 → 0.00034 s (987×); cell flips memory-bound** |
+| B2 | remaining memory term ≈ expert-weight residency: the replicated-EP decode touches all 64 experts' weights (1.8 GB/device) every step — at 128 tokens × top-6 nearly every expert is hit, so the reads are irreducible at this batch | napkin analysis (no change): 1.8 GB / 819 GB/s = 2.2 ms ≈ the measured 3.9 ms within 2× | — | — | — | floor reached; batching wider amortizes — stop |
+
+Step bound 0.335 → 0.0039 s (**86×**).  This was a real sharding bug class
+(contraction-dim cache sharding) that the roofline loop caught; the fix is
+now the default rule and the §Dry-run table contains the re-run cells.
+
+### Cell C — stablelm-3b / train_4k (dominant: memory)
+
+| iter | hypothesis | change | compute (s) | memory (s) | useful | verdict |
+|---|---|---|---|---|---|---|
+| C0 | — | baseline | 0.528 | **0.774** | 0.63 | memory-bound |
+| C1 | same attention-score materialization as cell A, fwd+bwd+remat | flash-kernel deployment accounting | **0.528** | 0.425 | 0.63 | **confirmed: memory 0.774 → 0.425 s; flips compute-bound** |
+| C2 | 37% of compute is remat recompute (useful 0.63); saving dot outputs eliminates it | `remat_policy="dots"` | 0.418 | 0.409 | **0.80** | compute confirmed ({c2['compute_s']:.3f} s, useful 0.80) — but **feasibility refuted**: the policy saves the attention-score dots too → 137 GB/device of saved activations.  A refuted hypothesis is data: the production form is a flash custom-VJP (scores recomputed in-kernel) + dots saved elsewhere |
+| C3 | microbatching restores feasibility | `train_microbatches=8` | 0.418 | 0.409 | 0.80 | peak unchanged in `memory_analysis()` — found a *tooling* limit: the CPU backend does not credit scan buffer reuse (verified mb1 vs mb8 identical).  Analytically: per-microbatch live activations ≈ 1.3 GB/device with nothing_saveable + mb8 → fits |
+
+Final deployed config for cell C: flash kernels + nothing_saveable remat +
+8 microbatches — step bound 0.774 → **0.528 s** (1.47×), i.e. 63% of the
+6·N·D ideal (0.333 s at 197 TF/chip); the remaining gap is remat recompute
+(deliberately kept: the dots-saveable alternative needs a flash custom-VJP
+to be memory-feasible, recorded as the next engineering step).
+
+### Stopping criteria
+
+Each cell stopped after the dominant term's best remaining idea napkin'd
+below 5% (A: chunk-size/accum-dtype tweaks; B: weight-residency floor;
+C: flash-bwd custom-VJP is the identified next step but is out of scope for
+cost accounting — it would not change the *reported* terms further).
+"""
+
+
+def main() -> None:
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+    text = text.replace("<!-- RL_RESULTS_TABLE -->", rl_table())
+    text = text.replace("<!-- DRYRUN_TABLE -->", dryrun_table())
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roofline_table())
+    text = text.replace("<!-- PERF_SECTION -->", perf_section())
+    with open(path, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md rendered")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Forward-compatibility shims for JAX API drift.
+
+The codebase (and its tests) are written against the current JAX surface:
+
+  * ``jax.shard_map(..., check_vma=...)`` — promoted out of
+    ``jax.experimental.shard_map`` (where the flag is ``check_rep``);
+  * ``jax.sharding.AbstractMesh(axis_sizes, axis_names)`` — older releases
+    take a single tuple of ``(name, size)`` pairs;
+  * ``pltpu.CompilerParams`` — renamed from ``TPUCompilerParams``; bridged
+    by :func:`tpu_compiler_params` below (re-exported by
+    :mod:`repro.kernels.ops`, whose dispatchers are its main consumers —
+    the implementation lives here because this module imports no kernel
+    modules, so the per-kernel imports of it can never cycle).
+
+``install()`` back-fills the *new* names onto old installs and is a no-op
+wherever the installed JAX already provides them.  It only ever adds
+missing attributes / widens accepted signatures — existing behaviour is
+never altered, so running under a current JAX is unaffected.
+
+Imported (and applied) from ``repro/__init__.py`` so that any
+``import repro`` guarantees the modern surface.  Importing jax here does
+not initialize the XLA backend, so XLA_FLAGS set before first device use
+(the dry-run contract) still take effect.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None, *,
+                  check_vma=None, check_rep=None, **kwargs):
+        if check_vma is not None:
+            check_rep = check_vma
+        if check_rep is not None:
+            kwargs["check_rep"] = check_rep
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def _install_abstract_mesh() -> None:
+    base = jax.sharding.AbstractMesh
+    params = list(inspect.signature(base.__init__).parameters)
+    # new-style constructor already takes (axis_sizes, axis_names)
+    if "axis_names" in params or "axis_sizes" in params:
+        return
+
+    class AbstractMesh(base):
+        """Accepts both the legacy ``((name, size), ...)`` pair form and
+        the current ``(axis_sizes, axis_names)`` two-tuple form."""
+
+        def __init__(self, *args, **kwargs):
+            if (len(args) == 2
+                    and all(isinstance(n, int) for n in args[0])
+                    and all(isinstance(n, str) for n in args[1])):
+                args = (tuple(zip(args[1], args[0])),)
+            super().__init__(*args, **kwargs)
+
+    AbstractMesh.__name__ = base.__name__
+    AbstractMesh.__qualname__ = base.__qualname__
+    jax.sharding.AbstractMesh = AbstractMesh
+
+
+def tpu_compiler_params(**kwargs):
+    """Build Pallas TPU compiler params under either API name: current JAX
+    exposes ``pltpu.CompilerParams``, older releases the same class as
+    ``pltpu.TPUCompilerParams``."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def install() -> None:
+    _install_shard_map()
+    _install_abstract_mesh()

@@ -1,0 +1,23 @@
+"""Distribution layer: logical-axis sharding rules, pipeline parallelism,
+and compressed cross-pod collectives.
+
+* :mod:`repro.dist.sharding` — logical axis -> mesh axis rules with
+  divisibility fallback; parameter / batch / KV-cache shardings.
+* :mod:`repro.dist.pipeline` — GPipe microbatch pipelining over ``pipe``.
+* :mod:`repro.dist.compress` — bf16 + error-feedback ``psum`` for the
+  slow ``pod`` axis.
+"""
+
+from repro.dist import compress, pipeline, sharding
+from repro.dist.compress import compressed_psum, ef_state
+from repro.dist.pipeline import gpipe
+from repro.dist.sharding import (batch_spec, cache_sharding,
+                                 decode_cache_shardings, dp_axes, dp_size,
+                                 model_size, param_shardings, spec_for_axes)
+
+__all__ = [
+    "sharding", "pipeline", "compress",
+    "spec_for_axes", "param_shardings", "batch_spec", "cache_sharding",
+    "decode_cache_shardings", "dp_axes", "dp_size", "model_size",
+    "gpipe", "compressed_psum", "ef_state",
+]

@@ -1,0 +1,52 @@
+"""Compressed cross-pod gradient reduction with error feedback.
+
+Over the slow ``pod`` axis (data-center interconnect, not ICI) the gradient
+all-reduce dominates step time, so it runs quantized: each step the local
+gradient plus the carried *error-feedback* residual is rounded to bf16,
+the bf16 payload is psum-averaged, and the rounding error is carried into
+the next step.  The residual makes the scheme unbiased over time — the
+accumulated average converges to the true mean (1-bit-Adam / EF-SGD
+argument), which tests/test_dist.py asserts over 20 steps.
+
+Usage inside a shard_map over the reduction axis::
+
+    err = ef_state(grads)                     # once, outside the step
+    avg, err = compressed_psum(grads, err, "pod")
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+COMPRESSED_DTYPE = jnp.bfloat16
+
+
+def ef_state(tree):
+    """Zero-initialized f32 error-feedback accumulators matching ``tree``."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), tree)
+
+
+def compressed_psum(grads, err, axis: str) -> Tuple[object, object]:
+    """Mean-reduce ``grads`` over ``axis`` with bf16 payload + error
+    feedback.  Must be called inside a shard_map/pmap over ``axis``.
+
+    Returns ``(avg, new_err)``: the (replicated) quantized mean and the
+    residual to carry into the next step.
+    """
+    n = jax.lax.psum(1, axis)
+    corrected = jax.tree.map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, err)
+    quantized = jax.tree.map(
+        lambda c: c.astype(COMPRESSED_DTYPE), corrected)
+    new_err = jax.tree.map(
+        lambda c, q: c - q.astype(jnp.float32), corrected, quantized)
+    # reduce in the compressed dtype — upcasting first would put f32 back
+    # on the wire and defeat the whole point.  The reduction's own bf16
+    # rounding is NOT error-fed-back (only local quantization is), but it
+    # is bounded per step and unbiased in expectation.
+    avg = jax.tree.map(
+        lambda q: jax.lax.psum(q, axis).astype(jnp.float32) / n, quantized)
+    return avg, new_err

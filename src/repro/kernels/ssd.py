@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 from repro.sched.spec import KernelSpec, TileIO
 
 
@@ -78,7 +80,7 @@ def ssd(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array, *,
         out_specs=pl.BlockSpec((1, chunk, P), lambda h, j: (h, j, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, P), x.dtype),
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
         name="ssd",

@@ -61,38 +61,6 @@ def _batch_sds(cfg: ModelConfig, mesh, seq: int, batch: int,
     return out
 
 
-def _cache_shardings(cfg: ModelConfig, caches_sds, mesh):
-    b_ok = None
-
-    def leaf_spec(x) -> P:
-        shape = x.shape
-        dp = shd.dp_axes(mesh)
-        b_ax = dp if shape[0] % shd.dp_size(mesh) == 0 else None
-        if len(shape) == 4 and shape[2] == cfg.n_kv_heads \
-                and shape[3] == cfg.head_dim:
-            return shd.cache_sharding(mesh, shape[0], shape[1],
-                                      cfg.n_kv_heads)
-        if len(shape) == 4:  # ssm state (B, H, P, N)
-            h_ax = "model" if shape[1] % shd.model_size(mesh) == 0 else None
-            return P(b_ax, h_ax, None, None)
-        if len(shape) == 3:  # mla latent (B, S, R) / ssm conv (B, W, C)
-            # shard the sequence, NOT the latent dim: the attention einsums
-            # contract over R, and a contraction-dim sharding makes the SPMD
-            # partitioner all-gather the whole (f32-upcast) cache every
-            # layer — measured at 16.8 GB/device/step on deepseek decode_32k
-            # before this rule (EXPERIMENTS.md §Perf cell B).
-            if shape[1] % shd.model_size(mesh) == 0 \
-                    and shape[1] >= shd.model_size(mesh):
-                return P(b_ax, "model", None)
-            last_ax = "model" if shape[2] % shd.model_size(mesh) == 0 \
-                and shape[2] >= shd.model_size(mesh) else None
-            return P(b_ax, None, last_ax)
-        return P(*([None] * len(shape)))
-
-    return jax.tree.map(lambda x: NamedSharding(mesh, leaf_spec(x)),
-                        caches_sds)
-
-
 def lowerable(cfg: ModelConfig, shape_name: str, mesh):
     """-> (fn, args_sds tuple).  ``jax.jit(fn).lower(*args_sds)``."""
     seq, batch, kind = SHAPES[shape_name]
@@ -133,8 +101,8 @@ def lowerable(cfg: ModelConfig, shape_name: str, mesh):
     p_sds, _ = params_sds(cfg, mesh)
     caches_sds = jax.eval_shape(
         functools.partial(serve_decode.init_caches, cfg, batch, seq))
-    caches_sds = _with_sharding(caches_sds,
-                                _cache_shardings(cfg, caches_sds, mesh))
+    caches_sds = _with_sharding(
+        caches_sds, shd.decode_cache_shardings(cfg, caches_sds, mesh))
     token_sds = _sds((batch, 1), jnp.int32, mesh,
                      shd.batch_spec(mesh, batch))
     pos_sds = _sds((), jnp.int32, mesh, P())

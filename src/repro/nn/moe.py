@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.dist.sharding import dp_axes
 from repro.nn.core import ParamSpec
 from repro.nn.layers import apply_swiglu
 
@@ -155,15 +156,13 @@ def apply_moe_ep(p: Dict, x: jax.Array, cfg: MoEConfig, mesh,
         out = jnp.zeros((T, D), jnp.float32).at[flat_t].add(contrib)
         return out.reshape(B, S, D).astype(xs.dtype)
 
+    dp = dp_axes(mesh)
     fn = jax.shard_map(
         local_fn, mesh=mesh,
-        in_specs=(P(("pod", "data") if "pod" in mesh.shape else "data",
-                    axis, None),
+        in_specs=(P(dp, axis, None),
                   P(None, None),
-                  P(None, axis, None, None) if False else
                   jax.tree.map(lambda _: P(axis, None, None), p["experts"])),
-        out_specs=P(("pod", "data") if "pod" in mesh.shape else "data",
-                    axis, None),
+        out_specs=P(dp, axis, None),
         check_vma=False)
     out = fn(x, p["router"]["w"], p["experts"])
     if cfg.n_shared:
@@ -200,7 +199,7 @@ def apply_moe_ep_replicated(p: Dict, x: jax.Array, cfg: MoEConfig, mesh,
         y = jax.lax.psum(y, axis)
         return y.reshape(B, S, D).astype(xs.dtype)
 
-    dp = ("pod", "data") if "pod" in mesh.shape else "data"
+    dp = dp_axes(mesh)
     fn = jax.shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(dp, None, None), P(None, None),

@@ -14,17 +14,32 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.dist import sharding as shd
 from repro.serve.decode import decode_step, init_caches
 
 
 def generate(params: Dict, cfg: ModelConfig, prompt: jax.Array,
              max_new_tokens: int, max_seq: Optional[int] = None,
              mesh=None) -> jax.Array:
-    """prompt: (B, P) int32 -> (B, P + max_new_tokens) greedy tokens."""
+    """prompt: (B, P) int32 -> (B, P + max_new_tokens) greedy tokens.
+
+    With ``mesh`` given, params and caches are placed by the dist-layer
+    rules before the token loop, so the scanned decode step runs sharded
+    (head-sharded KV for GQA, sequence-sharded for MQA/long-context)."""
     B, P = prompt.shape
     total = P + max_new_tokens
     max_seq = max_seq or total
     caches = init_caches(cfg, B, max_seq)
+    if mesh is not None:
+        from repro.models import encdec, lm
+        model = encdec if cfg.family == "encdec" else lm
+        params = jax.device_put(
+            params, shd.param_shardings(model.model_spec(cfg), mesh))
+        caches = jax.device_put(
+            caches, shd.decode_cache_shardings(cfg, caches, mesh))
+        prompt = jax.device_put(
+            prompt, jax.sharding.NamedSharding(
+                mesh, shd.batch_spec(mesh, B)))
     tokens0 = jnp.concatenate(
         [prompt, jnp.zeros((B, max_new_tokens), jnp.int32)], axis=1)
 

@@ -81,6 +81,19 @@ class Trainer:
 
     def run(self) -> List[Dict]:
         t = self.tcfg
+        try:
+            return self._run()
+        finally:
+            # join the in-flight async write even on a crash path: the
+            # atomicity contract is that a checkpoint whose save() started
+            # is either fully committed or absent — never torn.  Without
+            # this, a failure a few (fast) steps after a save races the
+            # writer thread and restart loses a committed-looking step.
+            if t.ckpt_dir:
+                self._ckpt.wait()
+
+    def _run(self) -> List[Dict]:
+        t = self.tcfg
         for step in range(self.start_step, t.steps):
             if t.fail_at_step is not None and step == t.fail_at_step:
                 raise InjectedFailure(f"injected failure at step {step}")

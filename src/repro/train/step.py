@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.dist import sharding as shd
 from repro.models import encdec, lm
 from repro.optim.adamw import Optimizer, apply_updates
 from repro.utils.tree import global_norm
@@ -48,7 +49,24 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, mesh=None,
     """Returns train_step(state, batch) -> (state, metrics).
 
     ``num_microbatches > 1`` accumulates gradients over sequential
-    microbatches (lax.scan) — the standard memory/batch-size lever."""
+    microbatches (lax.scan) — the standard memory/batch-size lever.
+
+    With ``mesh`` given, the step is fully sharded by the dist layer:
+    params (and thus grads / optimizer moments) follow the logical-axis
+    rules (FSDP over ``data`` × TP over ``model``), the batch follows
+    ``batch_spec``, and XLA's SPMD partitioner inserts the collectives."""
+
+    param_sh = batch_of = None
+    if mesh is not None:
+        model = encdec if cfg.family == "encdec" else lm
+        param_sh = shd.param_shardings(model.model_spec(cfg), mesh)
+
+        def batch_of(batch):
+            return jax.tree.map(
+                lambda x: jax.lax.with_sharding_constraint(
+                    x, jax.sharding.NamedSharding(
+                        mesh, shd.batch_spec(mesh, x.shape[0], ndim=x.ndim))),
+                batch)
 
     grad_fn = jax.value_and_grad(
         functools.partial(loss_fn, cfg=cfg, mesh=mesh), has_aux=True)
@@ -77,6 +95,11 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, mesh=None,
         return loss_sum * scale, jax.tree.map(lambda g: g * scale, grads_sum)
 
     def train_step(state: TrainState, batch: Dict):
+        if param_sh is not None:
+            state = state._replace(
+                params=jax.lax.with_sharding_constraint(state.params,
+                                                        param_sh))
+            batch = batch_of(batch)
         loss, grads = compute_grads(state.params, batch)
         updates, opt_state = opt.update(grads, state.opt_state, state.params)
         params = apply_updates(state.params, updates)

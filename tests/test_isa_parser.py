@@ -2,6 +2,8 @@
 control codes, memory effects."""
 
 import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep (see pyproject [test])
 from hypothesis import given, strategies as st
 
 from repro.core.isa import Control, Instruction, program_text

@@ -12,6 +12,8 @@ random games.
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep (see pyproject [test])
 from hypothesis import given, settings, strategies as st
 
 from repro.core import AssemblyGame, Machine

@@ -1,0 +1,129 @@
+"""Single-device unit tests for the dist-layer sharding rules.
+
+Everything here runs on AbstractMesh (no device allocation), so each
+``cache_sharding`` branch and the ``spec_for_axes`` divisibility fallback
+are covered without the 8-device subprocess harness of test_dist.py.
+"""
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as shd
+
+
+def _mesh(shape, names):
+    return jax.sharding.AbstractMesh(tuple(shape), tuple(names))
+
+
+# ---------------------------------------------------------------------------
+# spec_for_axes
+# ---------------------------------------------------------------------------
+
+def test_spec_for_axes_divisibility_fallback_per_dim():
+    mesh = _mesh((2, 4), ("data", "model"))
+    # both dims divisible: embed -> data (FSDP), mlp -> model (TP)
+    assert shd.spec_for_axes(("embed", "mlp"), mesh, (64, 32)) \
+        == P("data", "model")
+    # mlp not divisible by model=4 -> only that dim falls back
+    assert shd.spec_for_axes(("embed", "mlp"), mesh, (64, 30)) \
+        == P("data", None)
+    # embed not divisible by data=2 -> only that dim falls back
+    assert shd.spec_for_axes(("embed", "mlp"), mesh, (63, 32)) \
+        == P(None, "model")
+
+
+def test_spec_for_axes_missing_mesh_axis_replicates():
+    mesh = _mesh((4,), ("model",))
+    assert shd.spec_for_axes(("embed", "mlp"), mesh, (64, 32)) \
+        == P(None, "model")
+
+
+def test_spec_for_axes_never_reuses_a_mesh_axis():
+    mesh = _mesh((4,), ("model",))
+    # vocab and mlp both prefer model; only the first dim gets it
+    assert shd.spec_for_axes(("vocab", "mlp"), mesh, (64, 64)) \
+        == P("model", None)
+
+
+def test_spec_for_axes_unknown_and_scan_axes_replicate():
+    mesh = _mesh((2, 4), ("data", "model"))
+    assert shd.spec_for_axes(("layers", "embed", "mlp"), mesh, (8, 64, 32)) \
+        == P(None, "data", "model")
+    assert shd.spec_for_axes((None, "nonesuch"), mesh, (8, 8)) == P(None, None)
+
+
+# ---------------------------------------------------------------------------
+# dp helpers / batch_spec
+# ---------------------------------------------------------------------------
+
+def test_dp_axes_and_sizes():
+    assert shd.dp_axes(_mesh((2, 4), ("data", "model"))) == "data"
+    assert shd.dp_axes(_mesh((2, 2, 4), ("pod", "data", "model"))) \
+        == ("pod", "data")
+    assert shd.dp_axes(_mesh((4,), ("model",))) is None
+    assert shd.dp_size(_mesh((2, 2, 4), ("pod", "data", "model"))) == 4
+    assert shd.model_size(_mesh((2, 2, 4), ("pod", "data", "model"))) == 4
+    assert shd.model_size(_mesh((4,), ("pipe",))) == 1
+
+
+def test_batch_spec_divisibility_fallback():
+    mesh = _mesh((4, 2), ("data", "model"))
+    assert shd.batch_spec(mesh, 8) == P("data", None)
+    assert shd.batch_spec(mesh, 6) == P(None, None)        # 6 % 4 != 0
+    assert shd.batch_spec(mesh, 8, ndim=3) == P("data", None, None)
+    assert shd.batch_spec(_mesh((4,), ("pipe",)), 8) == P(None, None)
+
+
+# ---------------------------------------------------------------------------
+# cache_sharding — one test per branch
+# ---------------------------------------------------------------------------
+
+def test_cache_sharding_head_branch():
+    mesh = _mesh((2, 4), ("data", "model"))
+    assert shd.cache_sharding(mesh, 8, 1024, 8) \
+        == P("data", None, "model", None)
+
+
+def test_cache_sharding_mqa_sequence_branch():
+    mesh = _mesh((2, 4), ("data", "model"))
+    assert shd.cache_sharding(mesh, 8, 1024, 1) \
+        == P("data", "model", None, None)
+    # kv=2 not divisible by model=4 -> same sequence-sharded branch
+    assert shd.cache_sharding(mesh, 8, 1024, 2) \
+        == P("data", "model", None, None)
+
+
+def test_cache_sharding_long_context_branch():
+    mesh = _mesh((2, 4), ("data", "model"))
+    spec = shd.cache_sharding(mesh, 1, 1024, 1)
+    assert spec[0] is None and set(spec[1]) == {"data", "model"}
+
+
+def test_cache_sharding_full_fallback_replicates():
+    mesh = _mesh((2, 4), ("data", "model"))
+    # nothing divides: odd batch, prime seq, odd kv heads
+    assert shd.cache_sharding(mesh, 3, 1021, 3) == P(None, None, None, None)
+    # divisible batch but seq/heads indivisible: batch-only sharding
+    assert shd.cache_sharding(mesh, 8, 1021, 3) == P("data", None, None, None)
+
+
+def test_cache_sharding_model_only_mesh():
+    mesh = _mesh((4,), ("model",))
+    # no dp axes at all -> sequence over model when divisible
+    assert shd.cache_sharding(mesh, 8, 1024, 8) \
+        == P(None, ("model",), None, None)
+
+
+# ---------------------------------------------------------------------------
+# decode_cache_shardings leaf classification (shapes only, via eval_shape)
+# ---------------------------------------------------------------------------
+
+def test_decode_cache_shardings_covers_all_families():
+    from repro.configs import get_config
+    from repro.serve.decode import init_caches
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in ("stablelm-3b", "mamba2-1.3b", "deepseek-v2-lite-16b"):
+        cfg = get_config(arch, reduced=True)
+        caches = jax.eval_shape(lambda: init_caches(cfg, 2, 64))
+        sh = shd.decode_cache_shardings(cfg, caches, mesh)
+        assert jax.tree.structure(sh) == jax.tree.structure(caches)

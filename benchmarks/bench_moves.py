@@ -33,7 +33,7 @@ def run(budget: int = 6144):
         print(f"# {name}: inference best {env.best_cycles:.0f} "
               f"(baseline {env.t0:.0f})")
         for mv in moves[:2]:
-            print("\n".join("# " + l for l in mv.render().splitlines()))
+            print("\n".join("# " + ln for ln in mv.render().splitlines()))
     emit(rows, header=("bench", "kernel", "step", "opcode", "dir",
                        "gain_pct_T0", "class"))
     return rows

@@ -1,17 +1,45 @@
 """Benchmark aggregator: one module per paper table/figure (DESIGN.md §6).
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--out BENCH_ci.json]
+
+``--out`` writes a machine-readable summary (per-suite status, wall time,
+and whatever rows the suite returned) — CI uploads it as the benchmark
+trajectory artifact.
 """
 
 import argparse
-import sys
+import json
 import time
+
+
+def _jsonable(obj):
+    """Best-effort conversion of bench return values for the JSON report.
+    allow_nan=False so non-finite floats become strings instead of the
+    bare NaN/Infinity tokens that break strict JSON consumers."""
+    try:
+        json.dumps(obj, allow_nan=False)
+        return obj
+    except (TypeError, ValueError):
+        if isinstance(obj, (list, tuple)):
+            return [_jsonable(x) for x in obj]
+        if isinstance(obj, dict):
+            return {str(k): _jsonable(v) for k, v in obj.items()}
+        for conv in ("item", "tolist"):   # numpy scalars/arrays stay numeric
+            fn = getattr(obj, conv, None)
+            if fn is not None:
+                try:
+                    return _jsonable(fn())
+                except (TypeError, ValueError):
+                    pass
+        return str(obj)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="skip the RL-training benches (fig8 / §5.7)")
+    ap.add_argument("--out", default=None,
+                    help="write a JSON summary of every suite here")
     args = ap.parse_args()
 
     from benchmarks import (bench_autotune, bench_kernel_throughput,
@@ -33,14 +61,28 @@ def main() -> None:
             ("sec57_moves", bench_moves.run),
         ]
 
+    report = []
     for name, fn in suites:
         print(f"\n==== {name} ====", flush=True)
         t0 = time.time()
+        entry = {"suite": name, "ok": True}
         try:
-            fn()
+            entry["rows"] = _jsonable(fn())
         except Exception as e:  # keep the suite running; a bench failure
             print(f"BENCH-FAIL,{name},{type(e).__name__}: {e}")
-        print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
+            entry.update(ok=False, error=f"{type(e).__name__}: {e}")
+        entry["seconds"] = round(time.time() - t0, 3)
+        report.append(entry)
+        print(f"# {name} took {entry['seconds']:.1f}s", flush=True)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"fast": args.fast, "suites": report}, f, indent=2,
+                      allow_nan=False)
+        print(f"\n# wrote {args.out} "
+              f"({sum(r['ok'] for r in report)}/{len(report)} suites ok)")
+    if not all(r["ok"] for r in report):
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

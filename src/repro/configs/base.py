@@ -10,7 +10,7 @@ allocation).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 # The four assigned input shapes (seq_len, global_batch, kind)
 SHAPES: Dict[str, Tuple[int, int, str]] = {
@@ -84,6 +84,17 @@ class ModelConfig:
     attn_chunk: int = 2048
     seq_parallel: bool = False   # constrain inter-block activations to be
                                  # sequence-sharded over the model axis (SP)
+
+    # distributed train step (train.step.make_sharded_train_step):
+    # pipeline_stages > 1 opts the config into the shard_map gpipe step —
+    # launchers size the mesh's `pipe` axis from it; pipeline_microbatches
+    # is the gpipe M (bubble fraction (S-1)/(M+S-1)); compress_pod_grads
+    # routes the multi-pod gradient reduction through
+    # dist.compress.compressed_psum (bf16 wire format + error feedback)
+    # instead of a plain fp32 psum.
+    pipeline_stages: int = 0
+    pipeline_microbatches: int = 4
+    compress_pod_grads: bool = True
     supported_shapes: Tuple[str, ...] = ("train_4k", "prefill_32k",
                                          "decode_32k")
     shape_skips: Dict[str, str] = dataclasses.field(default_factory=dict)

@@ -187,7 +187,6 @@ class _FastDeps:
 
         # nearest in-block fixed-latency producer per use register
         last_def: Dict[str, int] = {}
-        blk_start = 0
         self.producers: List[List[Tuple[int, Optional[int]]]] = \
             [[] for _ in range(n)]
         consumers: List[List[int]] = [[] for _ in range(n)]

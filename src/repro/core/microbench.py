@@ -14,9 +14,9 @@ nothing guarantees the timed sequence has completed at the second clock read
 
 from __future__ import annotations
 
-from typing import Dict, Iterable, Optional, Sequence, Tuple
+from typing import Dict, Iterable, Optional, Tuple
 
-from repro.core.isa import Control, Instruction, SCALAR_OPS, VECTOR_OPS
+from repro.core.isa import Control, Instruction, SCALAR_OPS
 from repro.core.machine import Machine, dataflow_reference
 from repro.core.parser import analyze_operands
 

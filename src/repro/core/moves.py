@@ -29,9 +29,9 @@ class Move:
         lines = [f"move #{self.step}: {self.record.moved.opcode} {arrow} "
                  f"({self.gain_pct:+.2f}% of T0)  [{self.kind}]"]
         lines.append("  before:")
-        lines += [f"    {l}" for l in self.window_before]
+        lines += [f"    {ln}" for ln in self.window_before]
         lines.append("  after:")
-        lines += [f"    {l}" for l in self.window_after]
+        lines += [f"    {ln}" for ln in self.window_after]
         return "\n".join(lines)
 
 

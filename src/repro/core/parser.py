@@ -18,8 +18,8 @@ from __future__ import annotations
 import re
 from typing import Iterable, List, Optional, Sequence, Tuple
 
-from repro.core.isa import (Control, Instruction, MEM_STORE_OPS, NUM_SEMAPHORES,
-                            base_opcode, is_memory_op, opclass)
+from repro.core.isa import (Control, Instruction, MEM_STORE_OPS,
+                            NUM_SEMAPHORES, is_memory_op, opclass)
 
 _CTRL_RE = re.compile(
     r"\[B(?P<mask>[-0-9]{%d}):R(?P<r>[-0-9]):W(?P<w>[-0-9]):(?P<y>[Y-]):S(?P<s>\d+)\]"

@@ -11,7 +11,7 @@ study the paper takes its defaults from [11].
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

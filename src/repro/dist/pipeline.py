@@ -6,10 +6,20 @@ stage ``s`` processes microbatch ``t - s``, and activations hop to the next
 stage through a ring ``ppermute``.  Total ``M + S - 1`` steps, so bubble
 fraction ``(S - 1) / (M + S - 1)`` — the caller picks M accordingly.
 
-Implemented with ``shard_map`` so the collective schedule is explicit and
-the per-device program is exactly one stage's weights (stage weights enter
-sharded ``P("pipe")`` and never replicate).  Numerics match running the
-stages sequentially — asserted against that oracle by tests/test_dist.py.
+Two entry points:
+
+* :func:`gpipe` — standalone: wraps the schedule in its own ``shard_map``
+  (stage weights enter stacked ``(S, ...)`` and sharded ``P("pipe")``);
+* :func:`gpipe_local` — the per-device schedule alone, for callers that
+  are *already inside* a ``shard_map`` over a mesh containing ``axis``
+  (the sharded train step composes it with data-parallel gradient
+  collectives this way).
+
+Numerics match running the stages sequentially — asserted against that
+oracle by tests/test_dist.py.  The schedule is differentiable: the ring
+``ppermute`` transposes to the inverted ring, so ``jax.grad`` through
+``gpipe_local`` routes activation cotangents backwards stage by stage
+(exactly the 1F1B-style backward traffic).
 """
 
 from __future__ import annotations
@@ -17,6 +27,51 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+
+def gpipe_local(stage_fn, stage_weights, microbatches, *, n_stages: int,
+                axis: str = "pipe", replicate_out: bool = True):
+    """Run the fill/steady/drain schedule from inside an enclosing
+    ``shard_map`` over ``axis``.
+
+    Args:
+      stage_fn: ``(w, x) -> y`` for this rank's stage; ``x``/``y`` shaped
+        like one microbatch ``(mb, ...)``.
+      stage_weights: this rank's (already local) stage weights, handed to
+        ``stage_fn`` unchanged.
+      microbatches: ``(M, mb, ...)`` array, replicated over ``axis`` (only
+        stage 0 reads it).
+      n_stages: size of ``axis`` (not recoverable from inside shard_map).
+      axis: pipeline mesh axis name.
+      replicate_out: when True, psum-replicate the final-stage outputs to
+        every rank; when False, return them only on the last stage (zeros
+        elsewhere) — callers computing a loss mask it to the last stage so
+        gradients are not over-counted ``n_stages`` times.
+
+    Returns:
+      ``(M, mb, ...)`` outputs of the final stage.
+    """
+    n_micro = microbatches.shape[0]
+    stage = jax.lax.axis_index(axis)
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+    out = jnp.zeros_like(microbatches)
+    recv = jnp.zeros_like(microbatches[0])
+    for t in range(n_micro + n_stages - 1):
+        # stage 0 injects microbatch t during the fill phase; every other
+        # stage consumes what its predecessor sent last step
+        inp = jnp.where(stage == 0, microbatches[min(t, n_micro - 1)], recv)
+        y = stage_fn(stage_weights, inp)
+        m = t - (n_stages - 1)
+        if m >= 0:  # drain: the last stage owns finished microbatch m
+            out = out.at[m].set(jnp.where(stage == n_stages - 1, y, out[m]))
+        if t < n_micro + n_stages - 2:
+            recv = jax.lax.ppermute(y, axis, perm)
+    # only the last stage holds real outputs
+    out = jnp.where(stage == n_stages - 1, out, jnp.zeros_like(out))
+    if replicate_out:
+        # psum replicates them (every other rank contributes zeros)
+        out = jax.lax.psum(out, axis)
+    return out
 
 
 def gpipe(stage_fn, stage_weights, microbatches, mesh, axis: str = "pipe"):
@@ -35,33 +90,14 @@ def gpipe(stage_fn, stage_weights, microbatches, mesh, axis: str = "pipe"):
       (M, mb, d) outputs of the final stage, replicated over ``axis``.
     """
     n_stages = dict(mesh.shape)[axis]
-    n_micro = jax.tree.leaves(microbatches)[0].shape[0]
     lead = jax.tree.leaves(stage_weights)[0].shape[0]
     assert lead == n_stages, (
         f"gpipe: got {lead} stage weights for a {n_stages}-way '{axis}' axis")
-    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
 
     def local_fn(ws, xs):
         # ws: (1, ...) — this rank's stage; xs: (M, mb, d) — full stream
         w = jax.tree.map(lambda a: a[0], ws)
-        stage = jax.lax.axis_index(axis)
-        out = jnp.zeros_like(xs)
-        recv = jnp.zeros_like(xs[0])
-        for t in range(n_micro + n_stages - 1):
-            # stage 0 injects microbatch t during the fill phase; every
-            # other stage consumes what its predecessor sent last step
-            inp = jnp.where(stage == 0, xs[min(t, n_micro - 1)], recv)
-            y = stage_fn(w, inp)
-            m = t - (n_stages - 1)
-            if m >= 0:  # drain: the last stage owns finished microbatch m
-                out = out.at[m].set(jnp.where(stage == n_stages - 1,
-                                              y, out[m]))
-            if t < n_micro + n_stages - 2:
-                recv = jax.lax.ppermute(y, axis, perm)
-        # only the last stage holds real outputs; psum replicates them
-        # (every other rank contributes zeros)
-        out = jnp.where(stage == n_stages - 1, out, jnp.zeros_like(out))
-        return jax.lax.psum(out, axis)
+        return gpipe_local(stage_fn, w, xs, n_stages=n_stages, axis=axis)
 
     w_specs = jax.tree.map(lambda _: P(axis), stage_weights)
     x_specs = jax.tree.map(lambda _: P(), microbatches)

@@ -68,6 +68,10 @@ def model_size(mesh) -> int:
     return axis_sizes(mesh).get("model", 1)
 
 
+def pipe_size(mesh) -> int:
+    return axis_sizes(mesh).get("pipe", 1)
+
+
 # ---------------------------------------------------------------------------
 # parameter shardings
 # ---------------------------------------------------------------------------
@@ -118,6 +122,38 @@ def logical_specs(spec_tree, mesh):
     return jax.tree.map(
         lambda s: spec_for_axes(s.axes, mesh, s.shape),
         spec_tree, is_leaf=_is_param_spec)
+
+
+# ---------------------------------------------------------------------------
+# shard_map pipeline-step specs (train.step.make_sharded_train_step)
+# ---------------------------------------------------------------------------
+
+# top-level parameter-tree keys whose leaves are stacked per-layer weights
+# (leading dim = n_layers) that the pipeline step splits one block of
+# contiguous layers per ``pipe`` rank.  Everything else is "glue" (embed,
+# final norm, lm head) and stays replicated across the pipe axis.
+STAGE_KEYS: Tuple[str, ...] = ("layers",)
+
+
+def sharded_param_specs(params_tree, stage_keys: Sequence[str] = STAGE_KEYS):
+    """PartitionSpec tree for the shard_map train step's parameters: stacked
+    per-layer leaves shard their leading (layer) dim over ``pipe``; glue
+    parameters are replicated (plain DP — the pipeline step does not compose
+    with tensor parallelism).  Accepts a params tree or a ParamSpec tree."""
+    def sub(key, tree):
+        spec = P("pipe") if key in stage_keys else P()
+        return jax.tree.map(lambda _: spec, tree, is_leaf=_is_param_spec)
+    return {k: sub(k, v) for k, v in params_tree.items()}
+
+
+def sharded_ef_specs(params_tree, stage_keys: Sequence[str] = STAGE_KEYS):
+    """PartitionSpec tree for the compressed-psum error-feedback residuals:
+    each leaf carries a leading ``pod``-block dim (the residual is local to
+    a pod rank), and stage leaves additionally split layers over ``pipe``."""
+    def sub(key, tree):
+        spec = P("pod", "pipe") if key in stage_keys else P("pod")
+        return jax.tree.map(lambda _: spec, tree, is_leaf=_is_param_spec)
+    return {k: sub(k, v) for k, v in params_tree.items()}
 
 
 # ---------------------------------------------------------------------------

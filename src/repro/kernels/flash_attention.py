@@ -108,11 +108,11 @@ def make_spec(cfg: Dict) -> KernelSpec:
         s = jnp.dot(q, k.T)
         m = jnp.max(s, axis=-1, keepdims=True)
         p = jnp.exp(s - m)
-        l = jnp.sum(p, axis=-1, keepdims=True)
-        return (jnp.dot(p, v), l)
+        ell = jnp.sum(p, axis=-1, keepdims=True)
+        return (jnp.dot(p, v), ell)
 
-    def epilogue_fn(acc, l):
-        return (acc / l,)
+    def epilogue_fn(acc, ell):
+        return (acc / ell,)
 
     return KernelSpec(
         name="flash_attention",

@@ -8,10 +8,8 @@ Model code calls these, so flipping a config flag swaps the backend per op.
 
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
-import jax
 
 # canonical re-export: the kernels' CompilerParams drift shim (implemented
 # in repro.compat, which imports no kernel modules — cycle-free)

@@ -3,7 +3,6 @@ class; paper configuration n_rows=512, n_cols=4096)."""
 
 from __future__ import annotations
 
-import functools
 from typing import Dict
 
 import jax

@@ -25,7 +25,9 @@ from repro.dist import sharding as shd
 from repro.models import encdec, lm
 from repro.optim import adamw as adamw_fn, constant_schedule
 from repro.serve import decode as serve_decode
-from repro.train.step import TrainState, make_train_step
+from repro.train.step import (PipelineStepError, TrainState,
+                              make_sharded_train_step, make_train_step,
+                              wants_ef)
 
 
 def _sds(shape, dtype, mesh, spec: P):
@@ -61,15 +63,65 @@ def _batch_sds(cfg: ModelConfig, mesh, seq: int, batch: int,
     return out
 
 
+def sharded_train_lowerable(cfg: ModelConfig, mesh, *, seq: int,
+                            batch: int, num_microbatches: int = None):
+    """(fn, args_sds) for the shard_map pipeline train step on ``mesh`` —
+    the ``pipe``-axis analogue of the ``train`` branch of :func:`lowerable`
+    (requires ``pipe >= 2`` and no ``model`` axis; see
+    ``train.step.make_sharded_train_step`` for the constraints)."""
+    step_fn = make_sharded_train_step(cfg, _lower_opt(), mesh,
+                                      num_microbatches=num_microbatches)
+    spec_tree = lm.model_spec(cfg)
+    p_sds = jax.eval_shape(functools.partial(lm.init_model, cfg),
+                           jax.random.PRNGKey(0))
+    p_specs = shd.sharded_param_specs(spec_tree)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs)
+    p_sds = _with_sharding(p_sds, p_sh)
+    opt_sds = jax.eval_shape(_lower_opt().init, p_sds)
+    opt_sds = type(opt_sds)(
+        step=_sds((), jnp.int32, mesh, P()),
+        mu=jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=sh), opt_sds.mu, p_sh),
+        nu=jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=sh), opt_sds.nu, p_sh))
+    ef_sds = None
+    if wants_ef(cfg, mesh):
+        pod = shd.axis_sizes(mesh).get("pod", 1)
+        ef_specs = shd.sharded_ef_specs(spec_tree)
+        ef_sds = jax.tree.map(
+            lambda s, sp: _sds((pod,) + s.shape, jnp.float32, mesh, sp),
+            p_sds, ef_specs)
+    state_sds = TrainState(params=p_sds, opt_state=opt_sds,
+                           step=_sds((), jnp.int32, mesh, P()),
+                           ef=ef_sds)
+    bspec = P(shd.dp_axes(mesh))
+    batch_sds = {"tokens": _sds((batch, seq), jnp.int32, mesh, bspec),
+                 "labels": _sds((batch, seq), jnp.int32, mesh, bspec)}
+    return step_fn, (state_sds, batch_sds)
+
+
+def _lower_opt():
+    return adamw_fn(constant_schedule(3e-4), weight_decay=0.1,
+                    max_grad_norm=1.0)
+
+
 def lowerable(cfg: ModelConfig, shape_name: str, mesh):
     """-> (fn, args_sds tuple).  ``jax.jit(fn).lower(*args_sds)``."""
     seq, batch, kind = SHAPES[shape_name]
-    model = encdec if cfg.family == "encdec" else lm
+
+    if kind == "train" and shd.pipe_size(mesh) > 1:
+        try:
+            return sharded_train_lowerable(cfg, mesh, seq=seq, batch=batch)
+        except PipelineStepError:
+            # arch/mesh not stage-uniform (encdec/hybrid families, leading
+            # dense MoE layers, layers not divisible by pipe): the jit/GSPMD
+            # step below still lowers — it simply ignores the pipe axis —
+            # so an all-arch sweep over a pipe mesh keeps going
+            pass
 
     if kind == "train":
         p_sds, p_sh = params_sds(cfg, mesh)
-        opt = adamw_fn(constant_schedule(3e-4), weight_decay=0.1,
-                          max_grad_norm=1.0)
+        opt = _lower_opt()
         opt_sds = jax.eval_shape(opt.init, p_sds)
         opt_sh = type(opt_sds)(
             step=NamedSharding(mesh, P()),

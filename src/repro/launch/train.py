@@ -3,6 +3,17 @@
 On this CPU container it trains the reduced config end-to-end (the ~100M /
 few-hundred-step driver lives in examples/train_lm.py); on a real cluster
 the same entrypoint takes --full --mesh to pjit over the production mesh.
+
+``--pipe S`` (or ``pipeline_stages`` on the config) builds a host mesh
+with a ``pipe`` axis and switches the Trainer onto the shard_map gpipe
+step; ``--pods P`` adds a ``pod`` axis whose gradient reduction — when
+the shard_map step is active, i.e. ``--pipe >= 2`` — runs compressed
+(bf16 + error feedback) unless ``--no-compress-pod-grads``.  With
+``--pods`` alone the jit/GSPMD path still data-parallelizes over ``pod``,
+in plain fp32.
+Multi-device CPU smoke needs
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` exported before
+launch.
 """
 
 from __future__ import annotations
@@ -21,17 +32,57 @@ def main() -> None:
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient-accumulation chunks (jit step)")
+    ap.add_argument("--pipe", type=int, default=0,
+                    help="pipeline stages (0 = cfg.pipeline_stages; > 1 "
+                         "builds a `pipe` mesh axis + shard_map step)")
+    ap.add_argument("--pipe-microbatches", type=int, default=0,
+                    help="gpipe microbatches (0 = cfg.pipeline_microbatches)")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="pod axis size (> 1 = multi-pod gradient reduction)")
+    ap.add_argument("--no-compress-pod-grads", action="store_true",
+                    help="plain fp32 psum over `pod` instead of bf16+EF")
     ap.add_argument("--full", action="store_true",
                     help="full (not reduced) config — cluster use")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full)
+    pipe = args.pipe or cfg.pipeline_stages
+    overrides = {}
+    if pipe:
+        overrides["pipeline_stages"] = pipe
+    if args.pipe_microbatches:
+        overrides["pipeline_microbatches"] = args.pipe_microbatches
+    if args.no_compress_pod_grads:
+        overrides["compress_pod_grads"] = False
+    if overrides:
+        cfg = cfg.replace(**overrides)
+
+    mesh = None
+    if pipe > 1 or args.pods > 1:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(pipe=max(pipe, 1), pods=args.pods)
+        note = ""
+        if args.pods > 1:
+            # the compressed reduction lives in the shard_map pipeline
+            # step, which the Trainer only selects for pipe >= 2 — say so
+            # instead of claiming compression the jit path won't do
+            if args.no_compress_pod_grads:
+                pod_grads = "fp32 psum"
+            elif pipe > 1:
+                pod_grads = "bf16+EF compressed"
+            else:
+                pod_grads = ("fp32 psum — compressed reduction needs the "
+                             "shard_map step, pass --pipe >= 2")
+            note = f" (pod grads: {pod_grads})"
+        print(f"[train] mesh: {dict(mesh.shape)}{note}")
+
     tcfg = TrainConfig(steps=args.steps, seq_len=args.seq_len,
                        global_batch=args.global_batch, lr=args.lr,
                        ckpt_dir=args.ckpt_dir,
                        num_microbatches=args.microbatches)
-    trainer = Trainer(cfg, tcfg)
+    trainer = Trainer(cfg, tcfg, mesh=mesh)
 
     def on_straggler(step, dt):
         print(f"[train] straggler watermark: step {step} took {dt:.2f}s")

@@ -8,8 +8,7 @@ self-attention + cross-attention; layernorm + GELU as in Whisper.
 
 from __future__ import annotations
 
-import functools
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -7,15 +7,16 @@ block once (the MaxText pattern — essential for the 512-device dry-run).
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import nn
 from repro.configs.base import ModelConfig
 from repro.nn.attention import NO_WINDOW
-from repro.nn.core import ParamSpec, init_params, stack_specs
+from repro.nn.core import init_params, stack_specs
 from repro.nn.mla import MLAConfig
 from repro.nn.moe import MoEConfig
 from repro.nn.ssm import SSMConfig
@@ -135,9 +136,6 @@ def init_model(cfg: ModelConfig, key: jax.Array) -> Dict:
 # forward blocks
 # ---------------------------------------------------------------------------
 
-import numpy as np
-
-
 def window_schedule(cfg: ModelConfig) -> np.ndarray:
     """Per-layer attention window (NO_WINDOW = global).  Gemma-style: every
     ``global_every``-th layer (1-indexed) is global, the rest local.
@@ -192,6 +190,44 @@ def ssm_block(cfg: ModelConfig, p: Dict, x: jax.Array, **_) -> jax.Array:
                             ssm_config(cfg))
 
 
+_BLOCK_OF = {"dense": dense_block, "moe": moe_block, "ssm": ssm_block}
+
+
+def stage_forward(cfg: ModelConfig, stacked: Dict, x: jax.Array,
+                  windows: Optional[jnp.ndarray] = None) -> jax.Array:
+    """Apply a contiguous sub-stack of decoder blocks — one pipeline stage.
+
+    ``stacked`` holds this stage's layers with a leading layer dim (any
+    length that the leaves agree on); ``windows`` is the matching slice of
+    :func:`window_schedule` for attention families (may be traced — the
+    pipeline step slices it by ``axis_index`` inside shard_map).  Runs with
+    ``mesh=None``: the pipeline step owns all collectives explicitly.
+    """
+    block = _BLOCK_OF.get(cfg.family)
+    if block is None:
+        raise ValueError(f"stage_forward: unsupported family {cfg.family}")
+    if cfg.family == "ssm":
+        windows = None   # ssm blocks take no attention window
+    return _scan_layers(cfg, block, stacked, x, windows=windows)
+
+
+def head_forward(params: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Final norm + (tied) unembedding: residual stream -> logits."""
+    x = _apply_norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        return nn.unembed(params["embed"], x)
+    return nn.apply_lm_head(params["lm_head"], x)
+
+
+def embed_forward(params: Dict, tokens: jax.Array,
+                  cfg: ModelConfig) -> jax.Array:
+    """Token embedding (with the gemma sqrt(d) scale) -> residual stream."""
+    x = nn.apply_embedding(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    if cfg.name.startswith("gemma"):
+        x = x * (cfg.d_model ** 0.5)   # gemma embeds are sqrt(d)-scaled
+    return x
+
+
 # ---------------------------------------------------------------------------
 # full forward (train / prefill)
 # ---------------------------------------------------------------------------
@@ -238,9 +274,7 @@ def forward(params: Dict, tokens: jax.Array, cfg: ModelConfig,
             mesh=None) -> jax.Array:
     """tokens (B, S) -> logits (B, S, vocab).  Works for every decoder
     family; whisper lives in repro.models.encdec."""
-    x = nn.apply_embedding(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
-    if cfg.name.startswith("gemma"):
-        x = x * (cfg.d_model ** 0.5)   # gemma embeds are sqrt(d)-scaled
+    x = embed_forward(params, tokens, cfg)
 
     if cfg.family == "dense":
         x = _scan_layers(cfg, dense_block, params["layers"], x,
@@ -260,10 +294,7 @@ def forward(params: Dict, tokens: jax.Array, cfg: ModelConfig,
     else:
         raise ValueError(cfg.family)
 
-    x = _apply_norm(cfg, params["final_norm"], x)
-    if cfg.tie_embeddings:
-        return nn.unembed(params["embed"], x)
-    return nn.apply_lm_head(params["lm_head"], x)
+    return head_forward(params, x, cfg)
 
 
 def _hybrid_forward(params: Dict, x: jax.Array, cfg: ModelConfig,

@@ -21,7 +21,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.nn.core import ParamSpec, dense
+from repro.nn.core import dense
 
 NO_WINDOW = 1 << 30
 _NEG = -1e30
@@ -84,7 +84,7 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     vc = jnp.moveaxis(v.reshape(B, n_chunks, chunk, KH, Dv), 1, 0)
 
     def body(carry, xs):
-        m, l, acc = carry
+        m, ell, acc = carry
         kb, vb, cidx = xs
         k_pos = cidx * chunk + jnp.arange(chunk)
         # (B, KH, G, Sq, C)
@@ -99,7 +99,7 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         m_new = jnp.maximum(m, logits.max(axis=-1, keepdims=True))
         p_ = jnp.exp(logits - m_new)
         alpha = jnp.exp(m - m_new)
-        l_new = l * alpha + p_.sum(axis=-1, keepdims=True)
+        l_new = ell * alpha + p_.sum(axis=-1, keepdims=True)
         pv = jnp.einsum("bhgqc,bchd->bhgqd", p_, vb.astype(jnp.float32))
         acc_new = acc * alpha + pv
         return (m_new, l_new, acc_new), None
@@ -107,9 +107,9 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     m0 = jnp.full((B, KH, G, Sq, 1), _NEG, jnp.float32)
     l0 = jnp.zeros((B, KH, G, Sq, 1), jnp.float32)
     a0 = jnp.zeros((B, KH, G, Sq, Dv), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(
+    (m, ell, acc), _ = jax.lax.scan(
         body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
-    out = acc / jnp.maximum(l, 1e-30)
+    out = acc / jnp.maximum(ell, 1e-30)
     out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dv)
     return out.astype(q.dtype)
 
@@ -133,8 +133,8 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     logits = jnp.where(mask[None, None, None, None], logits, _NEG)
     m = logits.max(axis=-1, keepdims=True)
     p = jnp.exp(logits - m)
-    l = p.sum(axis=-1, keepdims=True)
-    o = jnp.einsum("bhgqs,bshd->bhgqd", p, v_cache.astype(jnp.float32)) / l
+    ell = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqs,bshd->bhgqd", p, v_cache.astype(jnp.float32)) / ell
     return o.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, D).astype(q.dtype)
 
 

@@ -16,8 +16,7 @@ the ``model`` axis by the dist layer.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ Pallas version is repro.kernels.ssd); decode carries an O(1) recurrent state
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -33,6 +33,11 @@ class AdamState(NamedTuple):
 class Optimizer:
     init: Callable
     update: Callable  # (grads, state, params) -> (updates, new_state)
+    # clip threshold applied inside ``update`` (None = no clipping).
+    # Exposed so distributed steps whose gradient shards live on different
+    # devices (the shard_map pipeline step) can apply the clip against the
+    # *global* norm — ``update``'s own clip only sees the local shard.
+    max_grad_norm: Optional[float] = None
 
 
 def _as_schedule(lr) -> Callable[[jnp.ndarray], jnp.ndarray]:
@@ -82,7 +87,7 @@ def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
                 mu_hat, nu_hat, params)
         return upd, AdamState(step=step, mu=mu, nu=nu)
 
-    return Optimizer(init=init, update=update)
+    return Optimizer(init=init, update=update, max_grad_norm=max_grad_norm)
 
 
 def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-5,

@@ -13,7 +13,7 @@ cycles are not comparable).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
 from repro.core.machine import Machine
 from repro.sched import baseline, lowering

@@ -20,10 +20,9 @@ reference by tests) and is the T_0 of the reward function.
 
 from __future__ import annotations
 
-import heapq
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.isa import (Control, Instruction, OpClass, base_opcode,
+from repro.core.isa import (Control, Instruction, OpClass,
                             is_fixed_latency)
 from repro.core.machine import true_fixed_latency  # vendor knowledge
 from repro.core.parser import memory_effects

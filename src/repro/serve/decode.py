@@ -11,7 +11,6 @@ cheap to compile while making the memory roofline of ``decode_32k`` /
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -133,8 +132,8 @@ def _masked_decode_attn(q, k_cache, v_cache, mask):
     logits = jnp.where(mask[None, None, None, None], logits, _NEG)
     m = logits.max(axis=-1, keepdims=True)
     p = jnp.exp(logits - m)
-    l = p.sum(axis=-1, keepdims=True)
-    o = jnp.einsum("bhgqs,bshd->bhgqd", p, v_cache.astype(jnp.float32)) / l
+    ell = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqs,bshd->bhgqd", p, v_cache.astype(jnp.float32)) / ell
     return o.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, D).astype(q.dtype)
 
 

@@ -8,7 +8,7 @@ token loop is one lax.scan, so serving compiles to a single program.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,6 +14,7 @@ fault-tolerance contract the brief requires:
 from __future__ import annotations
 
 import dataclasses
+import math
 import statistics
 import time
 from typing import Callable, Dict, List, Optional
@@ -24,9 +25,12 @@ import numpy as np
 from repro.ckpt import checkpoint
 from repro.configs.base import ModelConfig
 from repro.data.pipeline import make_data
+from repro.dist import sharding as shd
 from repro.models import encdec, lm
 from repro.optim import adamw as adamw_fn, linear_warmup_cosine
-from repro.train.step import TrainState, make_train_step
+from repro.train.step import (TrainState, init_ef_state,
+                              make_sharded_train_step, make_train_step,
+                              wants_ef)
 
 
 class InjectedFailure(RuntimeError):
@@ -69,14 +73,66 @@ class Trainer:
         state = TrainState(params=params, opt_state=self.opt.init(params),
                            step=jax.numpy.zeros((), jax.numpy.int32))
 
+        # a mesh with a pipe axis >= 2 selects the shard_map pipeline step:
+        # gpipe microbatches over `pipe`, compressed psum over `pod` (the
+        # config opts in via pipeline_stages / compress_pod_grads — see
+        # repro.launch.train, which sizes the mesh from them)
+        self.use_pipeline = mesh is not None and shd.pipe_size(mesh) > 1
+        if self.use_pipeline and wants_ef(cfg, mesh):
+            # error-feedback residuals ride in the train state so they are
+            # checkpointed (a restart must not reset accumulated residuals)
+            state = state._replace(ef=init_ef_state(params, mesh))
+
         self.start_step = 0
         if tcfg.ckpt_dir and checkpoint.latest_step(tcfg.ckpt_dir) is not None:
-            state, self.start_step = checkpoint.restore(tcfg.ckpt_dir, state)
+            try:
+                state, self.start_step = checkpoint.restore(tcfg.ckpt_dir,
+                                                            state)
+            except (ValueError, TypeError) as e:
+                if state.ef is None:
+                    # template has no ef leaves but restore still failed —
+                    # most likely a checkpoint from a compressed multi-pod
+                    # run resumed under a different compress/mesh config
+                    raise RuntimeError(
+                        "checkpoint restore failed: if the checkpoint was "
+                        "written by a compressed multi-pod run (TrainState"
+                        ".ef present), restart with the same "
+                        "compress_pod_grads / mesh configuration") from e
+                # checkpoint predates the compressed-reduction config (no
+                # ef leaves): restore everything else and restart the
+                # error-feedback residuals from zero
+                bare, self.start_step = checkpoint.restore(
+                    tcfg.ckpt_dir, state._replace(ef=None))
+                state = bare._replace(ef=state.ef)
+                print("[train] checkpoint carries no error-feedback "
+                      "residuals; reinitialized ef to zero")
             state = jax.tree.map(jax.numpy.asarray, state)
         self.state = state
 
-        step_fn = make_train_step(cfg, self.opt, mesh=mesh,
-                                  num_microbatches=tcfg.num_microbatches)
+        if self.use_pipeline:
+            if tcfg.num_microbatches > 1:
+                # the pipeline step has no gradient-accumulation scan; its
+                # microbatches are the gpipe stream (cfg.pipeline_
+                # microbatches), not tcfg.num_microbatches — say so rather
+                # than silently changing the effective-batch semantics
+                print(f"[train] pipeline step ignores num_microbatches="
+                      f"{tcfg.num_microbatches} (no gradient accumulation; "
+                      f"gpipe streams cfg.pipeline_microbatches instead)")
+            # clamp the gpipe microbatch count to divide the per-shard
+            # batch (strictness stays in make_sharded_train_step for
+            # direct callers; the Trainer knows the global batch and can
+            # pick the nearest workable M)
+            local_b = max(1, tcfg.global_batch // max(1, shd.dp_size(mesh)))
+            n_micro = math.gcd(cfg.pipeline_microbatches, local_b) or 1
+            if n_micro != cfg.pipeline_microbatches:
+                print(f"[train] pipeline microbatches clamped "
+                      f"{cfg.pipeline_microbatches} -> {n_micro} "
+                      f"(per-shard batch {local_b})")
+            step_fn = make_sharded_train_step(cfg, self.opt, mesh,
+                                              num_microbatches=n_micro)
+        else:
+            step_fn = make_train_step(cfg, self.opt, mesh=mesh,
+                                      num_microbatches=tcfg.num_microbatches)
         self.train_step = jax.jit(step_fn, donate_argnums=0)
 
     def run(self) -> List[Dict]:

@@ -12,18 +12,26 @@ from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.dist import compress
 from repro.dist import sharding as shd
+from repro.dist.pipeline import gpipe_local
 from repro.models import encdec, lm
-from repro.optim.adamw import Optimizer, apply_updates
-from repro.utils.tree import global_norm
+from repro.optim.adamw import AdamState, Optimizer, apply_updates
+from repro.utils.tree import global_norm, sum_squares
 
 
 class TrainState(NamedTuple):
     params: Dict
     opt_state: object
     step: jnp.ndarray
+    # error-feedback residuals for the compressed pod-axis gradient
+    # reduction (None outside the multi-pod shard_map step).  Leaves carry
+    # a leading pod-block dim: global (pod, *param_shape), sharded P("pod")
+    # — the residual is *local* to a pod rank by construction.
+    ef: object = None
 
 
 def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
@@ -109,6 +117,194 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, mesh=None,
             "step": state.step + 1,
         }
         return TrainState(params, opt_state, state.step + 1), metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# shard_map distributed step: gpipe over `pipe`, compressed psum over `pod`
+# ---------------------------------------------------------------------------
+
+class PipelineStepError(ValueError):
+    """A config/mesh combination the shard_map pipeline step cannot stage
+    (raised eagerly by :func:`make_sharded_train_step`'s validation).
+    Callers offering a GSPMD fallback catch exactly this — not bare
+    ValueError — so genuine construction bugs still surface."""
+
+
+def wants_ef(cfg: ModelConfig, mesh) -> bool:
+    """True when the sharded step on ``mesh`` will carry error-feedback
+    state (compressed pod-axis reduction active)."""
+    return (cfg.compress_pod_grads and shd.pipe_size(mesh) > 1
+            and shd.axis_sizes(mesh).get("pod", 1) > 1)
+
+
+def init_ef_state(params, mesh):
+    """Zero error-feedback residuals for :func:`make_sharded_train_step`:
+    one f32 block per ``pod`` rank, stacked on a leading dim.  Each leaf is
+    created directly under its shard_map sharding (P("pod") / stage leaves
+    P("pod", "pipe")) — materializing (pod, *param_shape) zeros replicated
+    on the default device would double the fp32 parameter footprint per
+    pod before the step ever runs."""
+    pod = shd.axis_sizes(mesh).get("pod", 1)
+    ef_specs = shd.sharded_ef_specs(params)
+
+    def make(p, spec):
+        sharding = jax.sharding.NamedSharding(mesh, spec)
+        return jax.jit(
+            lambda: jnp.zeros((pod,) + p.shape, jnp.float32),
+            out_shardings=sharding)()
+
+    return jax.tree.map(make, params, ef_specs)
+
+
+def make_sharded_train_step(cfg: ModelConfig, opt: Optimizer, mesh, *,
+                            num_microbatches: Optional[int] = None,
+                            compress_pod: Optional[bool] = None):
+    """Explicit-collective train step built on ``jax.shard_map``.
+
+    Per device, the step: embeds the local batch shard, stages the decoder
+    blocks through :func:`repro.dist.pipeline.gpipe_local` microbatches
+    over the ``pipe`` axis (each rank owns ``n_layers / pipe`` contiguous
+    layers — stage weights never replicate), differentiates the pipeline
+    in place (the ring ppermute transposes to the backward ring), then
+    reduces gradients: glue params (embed / final norm / head) psum over
+    ``pipe``, everything pmean over ``data``, and over the slow ``pod``
+    axis either :func:`repro.dist.compress.compressed_psum` (bf16 wire
+    format + error feedback, ``compress_pod``) or a plain fp32 pmean.
+
+    Constraints (checked eagerly): ``pipe >= 2`` on the mesh; ``model``
+    axis absent or size 1 (the pipeline step does not compose with tensor
+    parallelism — use :func:`make_train_step` for TP meshes); family in
+    dense/moe/ssm with a uniform layer stack divisible by ``pipe``;
+    ``opt`` from :mod:`repro.optim.adamw` (AdamState-shaped state).
+
+    Returns ``train_step(state, batch) -> (state, metrics)`` with the same
+    contract as :func:`make_train_step`; ``state.ef`` must be
+    :func:`init_ef_state` when the compressed path is active, else None.
+    """
+    sizes = shd.axis_sizes(mesh)
+    n_stages = sizes.get("pipe", 1)
+    if n_stages < 2:
+        raise PipelineStepError("make_sharded_train_step needs a mesh 'pipe' axis "
+                         f"of size >= 2, got {sizes}")
+    if sizes.get("model", 1) != 1:
+        raise PipelineStepError("the pipeline step does not compose with tensor "
+                         "parallelism (model axis > 1); use make_train_step")
+    if cfg.family not in ("dense", "moe", "ssm"):
+        raise PipelineStepError(f"pipeline step: unsupported family {cfg.family}")
+    if cfg.family == "moe" and cfg.first_dense_layers:
+        raise PipelineStepError("pipeline step: moe configs with leading dense "
+                         "layers are not stage-uniform")
+    if cfg.n_layers % n_stages:
+        raise PipelineStepError(f"n_layers={cfg.n_layers} not divisible by "
+                         f"pipe={n_stages}")
+    n_micro = num_microbatches or cfg.pipeline_microbatches
+    has_pod = sizes.get("pod", 1) > 1
+    if compress_pod is None:
+        compress_pod = cfg.compress_pod_grads
+    compress_pod = bool(compress_pod and has_pod)
+    dp_total = sizes.get("pod", 1) * sizes.get("data", 1)
+    stage_keys = tuple(k for k in shd.STAGE_KEYS)
+    layers_per_stage = cfg.n_layers // n_stages
+    windows_full = (jnp.asarray(lm.window_schedule(cfg))
+                    if cfg.family in ("dense", "moe") else None)
+
+    def local_loss(params, batch):
+        tokens = batch["tokens"]
+        x = lm.embed_forward(params, tokens, cfg)
+        mb = tokens.shape[0] // n_micro
+        micro = x.reshape((n_micro, mb) + x.shape[1:])
+        if windows_full is not None:
+            stage = jax.lax.axis_index("pipe")
+            wloc = jax.lax.dynamic_slice_in_dim(
+                windows_full, stage * layers_per_stage, layers_per_stage)
+        else:
+            wloc = None
+
+        def stage_fn(w, h):
+            return lm.stage_forward(cfg, w, h, windows=wloc)
+
+        y = gpipe_local(stage_fn, params["layers"], micro,
+                        n_stages=n_stages, axis="pipe", replicate_out=False)
+        y = y.reshape((tokens.shape[0],) + y.shape[2:])
+        logits = lm.head_forward(params, y, cfg)
+        nll = cross_entropy(logits, batch["labels"])
+        # only the last pipe rank holds real pipeline outputs; masking the
+        # loss there makes the summed-over-ranks scalar equal ONE copy of
+        # the shard loss, so backward collectives don't over-count it
+        is_last = jax.lax.axis_index("pipe") == n_stages - 1
+        return jnp.where(is_last, nll, 0.0)
+
+    def device_step(state: TrainState, batch: Dict):
+        params = state.params
+        loss_part, grads = jax.value_and_grad(local_loss)(params, batch)
+        # glue gradients are partial per pipe rank (embed input path lands
+        # on stage 0, head path on the last stage, tied embeddings on
+        # both): psum assembles them.  Stage gradients stay local — each
+        # rank owns its layer block.
+        grads = {k: (v if k in stage_keys else
+                     jax.tree.map(lambda g: jax.lax.psum(g, "pipe"), v))
+                 for k, v in grads.items()}
+        loss = jax.lax.psum(loss_part, "pipe")
+        if "data" in sizes:
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, "data"), grads)
+            loss = jax.lax.pmean(loss, "data")
+        ef = state.ef
+        if has_pod:
+            loss = jax.lax.pmean(loss, "pod")
+            if compress_pod:
+                err = jax.tree.map(lambda e: e[0], ef)
+                grads, new_err = compress.compressed_psum(grads, err, "pod")
+                ef = jax.tree.map(lambda e: e[None], new_err)
+            else:
+                grads = jax.tree.map(lambda g: jax.lax.pmean(g, "pod"),
+                                     grads)
+        # true global grad norm: stage shards live on distinct pipe ranks
+        stage_sq = sum_squares({k: grads[k] for k in stage_keys
+                                if k in grads})
+        glue_sq = sum_squares({k: v for k, v in grads.items()
+                               if k not in stage_keys})
+        gnorm = jnp.sqrt(glue_sq + jax.lax.psum(stage_sq, "pipe"))
+        if opt.max_grad_norm is not None:
+            # clip against the GLOBAL norm here; after this scaling every
+            # per-rank norm opt.update can see is <= max_grad_norm, so its
+            # own (local) clip is a no-op — clipping happens exactly once
+            scale = jnp.minimum(1.0, opt.max_grad_norm / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        updates, opt_state = opt.update(grads, state.opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": state.step + 1}
+        return TrainState(params, opt_state, state.step + 1, ef), metrics
+
+    # --- in/out specs ------------------------------------------------------
+    p_specs = shd.sharded_param_specs(lm.model_spec(cfg), stage_keys)
+    opt_specs = AdamState(step=P(), mu=p_specs, nu=p_specs)
+    ef_specs = (shd.sharded_ef_specs(lm.model_spec(cfg), stage_keys)
+                if compress_pod else None)
+    state_specs = TrainState(params=p_specs, opt_state=opt_specs,
+                             step=P(), ef=ef_specs)
+    metric_specs = {"loss": P(), "grad_norm": P(), "step": P()}
+    bspec = P(shd.dp_axes(mesh))
+
+    def train_step(state: TrainState, batch: Dict):
+        batch_size = batch["tokens"].shape[0]
+        if batch_size % dp_total:
+            raise ValueError(f"global batch {batch_size} not divisible by "
+                             f"pod*data={dp_total}")
+        if (batch_size // dp_total) % n_micro:
+            raise ValueError(f"local batch {batch_size // dp_total} not "
+                             f"divisible by {n_micro} microbatches")
+        if compress_pod and state.ef is None:
+            raise ValueError("compressed pod reduction needs state.ef — "
+                             "initialize it with init_ef_state(params, mesh)")
+        batch_specs = jax.tree.map(lambda _: bspec, batch)
+        fn = jax.shard_map(device_step, mesh=mesh,
+                           in_specs=(state_specs, batch_specs),
+                           out_specs=(state_specs, metric_specs),
+                           check_vma=False)
+        return fn(state, batch)
 
     return train_step
 

@@ -26,10 +26,15 @@ def tree_cast(a, dtype):
     return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, a)
 
 
-def global_norm(tree) -> jnp.ndarray:
+def sum_squares(tree) -> jnp.ndarray:
+    """fp32 sum of squared entries over every leaf (0. for empty trees)."""
     leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
               for x in jax.tree.leaves(tree)]
-    return jnp.sqrt(jnp.sum(jnp.stack(leaves))) if leaves else jnp.zeros(())
+    return jnp.sum(jnp.stack(leaves)) if leaves else jnp.zeros(())
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum_squares(tree))
 
 
 def clip_by_global_norm(tree, max_norm):

@@ -2,8 +2,6 @@
 subprocess (512 virtual devices; the full 40-cell × 2-mesh sweep is run by
 ``python -m repro.launch.dryrun --arch all --mesh both``)."""
 
-import json
-
 import pytest
 
 _CELL_CODE = """

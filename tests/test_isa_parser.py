@@ -4,10 +4,10 @@ control codes, memory effects."""
 import pytest
 
 pytest.importorskip("hypothesis")  # optional test dep (see pyproject [test])
-from hypothesis import given, strategies as st
+from hypothesis import given, strategies as st  # noqa: E402
 
-from repro.core.isa import Control, Instruction, program_text
-from repro.core.parser import (adjacent_register, expand_register,
+from repro.core.isa import program_text  # noqa: E402
+from repro.core.parser import (adjacent_register, expand_register,  # noqa: E402
                                memory_effects, parse_line, parse_program)
 
 

@@ -1,8 +1,6 @@
 """Machine-model tests: determinism, microbenchmark recovery of the hidden
 latency table, stale-read semantics, counters."""
 
-import pytest
-
 from repro.core import Machine, build_stall_table, clock_based_estimate
 from repro.core.machine import dataflow_reference, true_fixed_latency
 from repro.core.microbench import DEFAULT_BENCH_OPS, measure_stall_count

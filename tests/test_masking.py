@@ -14,10 +14,10 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")  # optional test dep (see pyproject [test])
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import AssemblyGame, Machine
-from repro.core.machine import dataflow_reference
+from repro.core import AssemblyGame, Machine  # noqa: E402
+from repro.core.machine import dataflow_reference  # noqa: E402
 
 KERNELS_UNDER_TEST = ["rmsnorm", "flash_attention", "matmul_leakyrelu", "ssd"]
 

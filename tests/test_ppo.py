@@ -4,11 +4,9 @@ on a tiny budget."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.ppo import (PPOConfig, compute_gae, init_agent,
-                            masked_entropy, masked_log_probs, policy_value,
-                            sample_action)
+                            masked_entropy, sample_action)
 
 
 def _gae_numpy(rewards, values, dones, last_value, gamma, lam):

@@ -1,7 +1,6 @@
 """Compiler-integration pipeline: lowering validity, baseline quality,
 autotune, cache round-trip, probabilistic testing, end-to-end optimize."""
 
-import numpy as np
 import pytest
 
 from repro.core import Machine, analyze

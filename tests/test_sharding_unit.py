@@ -115,6 +115,90 @@ def test_cache_sharding_model_only_mesh():
 
 
 # ---------------------------------------------------------------------------
+# host mesh shape arithmetic (pipe/pod compose with data/model)
+# ---------------------------------------------------------------------------
+
+def test_host_mesh_shape_pipe_composes():
+    from repro.launch.mesh import host_mesh_shape
+    assert host_mesh_shape(8) == ((8, 1), ("data", "model"))
+    assert host_mesh_shape(8, model=2) == ((4, 2), ("data", "model"))
+    # pipe no longer replaces data/model — it composes
+    assert host_mesh_shape(8, pipe=4) \
+        == ((4, 2, 1), ("pipe", "data", "model"))
+    assert host_mesh_shape(8, model=2, pipe=2) \
+        == ((2, 2, 2), ("pipe", "data", "model"))
+    assert host_mesh_shape(8, pipe=2, pods=2) \
+        == ((2, 2, 2, 1), ("pod", "pipe", "data", "model"))
+    assert host_mesh_shape(16, model=2, pipe=2, pods=2) \
+        == ((2, 2, 2, 2), ("pod", "pipe", "data", "model"))
+
+
+def test_host_mesh_shape_rejects_indivisible():
+    import pytest
+    from repro.launch.mesh import host_mesh_shape
+    with pytest.raises(ValueError):
+        host_mesh_shape(8, pipe=3)
+
+
+def test_production_mesh_pipe_carves_data():
+    import pytest
+    from repro.launch.mesh import make_production_mesh
+    with pytest.raises(ValueError):
+        make_production_mesh(pipe=3)   # must divide the 16-way data axis
+
+
+# ---------------------------------------------------------------------------
+# shard_map pipeline-step specs
+# ---------------------------------------------------------------------------
+
+def test_sharded_param_specs_split_layers_over_pipe():
+    from repro.configs import get_config
+    from repro.models import lm
+    cfg = get_config("stablelm-3b", reduced=True)
+    spec_tree = lm.model_spec(cfg)
+    specs = shd.sharded_param_specs(spec_tree)
+    assert jax.tree.structure(specs) == jax.tree.structure(
+        spec_tree, is_leaf=lambda x: hasattr(x, "axes"))
+    flat = jax.tree.leaves(specs["layers"])
+    assert flat and all(s == P("pipe") for s in flat)
+    assert all(s == P() for s in jax.tree.leaves(specs["embed"]))
+    ef = shd.sharded_ef_specs(spec_tree)
+    assert all(s == P("pod", "pipe") for s in jax.tree.leaves(ef["layers"]))
+    assert all(s == P("pod") for s in jax.tree.leaves(ef["embed"]))
+
+
+def test_pipe_size_helper():
+    assert shd.pipe_size(_mesh((4,), ("pipe",))) == 4
+    assert shd.pipe_size(_mesh((2, 4), ("data", "model"))) == 1
+
+
+def test_make_sharded_train_step_validates_eagerly():
+    import pytest
+    from repro.configs import get_config
+    from repro.optim import adamw as adamw_fn, constant_schedule
+    from repro.train.step import make_sharded_train_step
+    opt = adamw_fn(constant_schedule(1e-3))
+    cfg = get_config("stablelm-3b", reduced=True)
+    # no pipe axis
+    with pytest.raises(ValueError, match="pipe"):
+        make_sharded_train_step(cfg, opt, _mesh((2, 4), ("data", "model")))
+    # tensor parallelism does not compose with the pipeline step
+    with pytest.raises(ValueError, match="tensor"):
+        make_sharded_train_step(
+            cfg, opt, _mesh((2, 2, 2), ("pipe", "data", "model")))
+    # layer stack must split evenly across stages (reduced has 2 layers)
+    with pytest.raises(ValueError, match="divisible"):
+        make_sharded_train_step(
+            cfg.replace(n_layers=2), opt,
+            _mesh((4, 2, 1), ("pipe", "data", "model")))
+    # non-uniform families are rejected
+    with pytest.raises(ValueError, match="family"):
+        make_sharded_train_step(
+            get_config("zamba2-2.7b", reduced=True), opt,
+            _mesh((2, 2, 1), ("pipe", "data", "model")))
+
+
+# ---------------------------------------------------------------------------
 # decode_cache_shardings leaf classification (shapes only, via eval_shape)
 # ---------------------------------------------------------------------------
 

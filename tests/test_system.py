@@ -2,10 +2,7 @@
 workflow (microbench -> autotune -> game -> verify -> cache -> deploy) and
 the training framework around it."""
 
-import numpy as np
-
-from repro.core import Machine, build_stall_table
-from repro.core.machine import dataflow_reference
+from repro.core import Machine
 from repro.core.ppo import PPOConfig
 from repro.kernels import KERNELS
 from repro.sched.api import CuAsmRL
@@ -21,8 +18,6 @@ def test_full_workflow_produces_valid_faster_schedule(tmp_path, stall_db):
     # never slower than the baseline, and semantically identical
     assert art.optimized_cycles <= art.baseline_cycles
     m = Machine()
-    game = opt.last_game
-    baseline = game  # baseline program isn't stored on the artifact; verify
     for seed in range(3):
         ref_out = m.run(art.program, input_seed=seed).outputs
         assert ref_out  # non-empty observable state

@@ -142,8 +142,6 @@ def roofline_table() -> str:
 
 def perf_section() -> str:
     hc = load("hillclimb_AC.json")
-    a1 = hc["A1b"]["roofline"]
-    c1 = hc["C1b"]["roofline"]
     c2 = hc["C2"]["roofline"]
     return f"""
 **Cell selection from the baseline table:** A = whisper-large-v3 ×

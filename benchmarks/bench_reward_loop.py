@@ -1,0 +1,81 @@
+"""Reward-loop throughput on the §5.7 kernels: env-steps/sec through the
+fast measurement path (timing-only executor + checkpointed incremental
+re-timing + schedule memo) vs. the full dataflow oracle, raw
+measure-calls/sec for both executors, and the memo hit rate under a
+training-shaped access pattern (episode resets re-measure the start
+schedule).  Tracked in CI from the PR that introduced the fast path."""
+
+import time
+
+import numpy as np
+
+from repro.core import Machine, build_stall_table
+from repro.core.env import AssemblyGame
+from repro.kernels import KERNELS
+from repro.sched import lower, schedule
+from benchmarks.common import emit
+
+
+def _env_steps_per_sec(prog, db, fast, budget_steps, seed=0):
+    """Training-shaped stepping: observation written into preallocated
+    buffers (the vectorized rollout path), random valid actions, resets on
+    episode end — everything identical between the two measurement paths."""
+    env = AssemblyGame(prog, stall_db=db, episode_length=32,
+                       use_fast_measure=fast)
+    state_buf = np.zeros((env.n, env.feature_dim), np.float32)
+    mask_buf = np.zeros(env.num_actions, np.float32)
+    rng = np.random.default_rng(seed)
+    env.reset()
+    n = 0
+    t0 = time.perf_counter()
+    while n < budget_steps:
+        env.write_obs(state_buf, mask_buf)
+        va = np.flatnonzero(mask_buf)
+        if va.size == 0:
+            env.reset()
+            continue
+        env.begin_step(int(rng.choice(va)))
+        if fast:
+            env.prime_measure()
+        _, _, done, _ = env.finish_step(want_obs=False)
+        n += 1
+        if done:
+            env.reset()
+    dt = time.perf_counter() - t0
+    return n / dt, env
+
+
+def _calls_per_sec(fn, min_seconds=0.4):
+    k = 0
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < min_seconds:
+        fn()
+        k += 1
+    return k / (time.perf_counter() - t0)
+
+
+def run(budget_steps: int = 300):
+    db = build_stall_table()
+    rows = []
+    for name in ("matmul_leakyrelu", "bmm"):       # the two kernels of §5.7
+        kdef = KERNELS[name]
+        prog = schedule(lower(kdef.make_spec(kdef.configs[0])))
+        m = Machine()
+        run_cps = _calls_per_sec(lambda: m.run(prog))
+        time_cps = _calls_per_sec(lambda: m.time(prog))
+        oracle_sps, _ = _env_steps_per_sec(prog, db, False,
+                                           max(60, budget_steps // 4))
+        fast_sps, env = _env_steps_per_sec(prog, db, True, budget_steps)
+        hit_rate = env.memo_hits / max(env.measure_calls, 1)
+        speedup = fast_sps / oracle_sps
+        rows.append(("reward_loop", name, len(prog),
+                     round(run_cps, 1), round(time_cps, 1),
+                     round(oracle_sps, 1), round(fast_sps, 1),
+                     round(speedup, 2), round(hit_rate, 3)))
+        print(f"# {name}: {len(prog)} ins | run {run_cps:.0f}/s vs "
+              f"time {time_cps:.0f}/s | env-steps/s {oracle_sps:.0f} -> "
+              f"{fast_sps:.0f} ({speedup:.1f}x, memo hit {hit_rate:.1%})")
+    emit(rows, header=("bench", "kernel", "n_ins", "run_calls_per_s",
+                       "time_calls_per_s", "env_steps_per_s_oracle",
+                       "env_steps_per_s_fast", "speedup", "memo_hit_rate"))
+    return rows

@@ -43,9 +43,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_autotune, bench_kernel_throughput,
-                            bench_microbench, bench_moves, bench_rl_sensitivity,
-                            bench_roofline, bench_stall_resolution,
-                            bench_workload_analysis)
+                            bench_microbench, bench_moves, bench_reward_loop,
+                            bench_rl_sensitivity, bench_roofline,
+                            bench_stall_resolution, bench_workload_analysis)
 
     suites = [
         ("table1_microbench", bench_microbench.run),
@@ -54,6 +54,9 @@ def main() -> None:
         ("fig6_kernel_throughput", bench_kernel_throughput.run),
         ("table3_workload", bench_workload_analysis.run),
         ("roofline", bench_roofline.run),
+        # reward-loop throughput: in the --fast set so the CI bench smoke
+        # job records the fast-path trajectory in BENCH_ci.json
+        ("reward_loop", bench_reward_loop.run),
     ]
     if not args.fast:
         suites += [

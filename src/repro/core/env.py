@@ -21,6 +21,17 @@ Two masking implementations:
 The masking rules guarantee (and property tests verify) that any sequence of
 masked actions preserves the observable dataflow semantics of the program on
 the machine model.
+
+Reward measurement has the same two-path structure as masking: the dataflow
+oracle ``Machine.run`` stays the reference, while the default fast path
+measures through :class:`repro.core.timing.ScheduleTimer` (timing-only
+scoreboard, checkpointed so an adjacent swap re-times only the program
+suffix) behind a schedule->cycles memo keyed by the position->identity
+permutation — shareable across the vectorized training envs, with hit/miss
+counters surfaced into ``GameResult.stats``.  The fast path is bit-exact
+(property-tested in ``tests/test_timing_fast.py``), and ``step`` splits
+into ``begin_step`` / ``prime_measure`` / ``finish_step`` so a driver can
+batch one step's measurements for all envs through the shared memo.
 """
 
 from __future__ import annotations
@@ -35,6 +46,7 @@ from repro.core import embedding
 from repro.core.isa import Instruction, OpClass, is_fixed_latency
 from repro.core.machine import Machine
 from repro.core.parser import block_id_vector, memory_effects
+from repro.core.timing import ScheduleTimer
 
 EPISODE_LENGTH = 32  # §5.7: sufficient for the paper's kernels
 
@@ -175,6 +187,7 @@ class _FastDeps:
         self.sync = [ins.klass is OpClass.SYNC for ins in program]
         self.stall = np.array([max(1, ins.ctrl.stall) for ins in program],
                               np.int64)
+        self.stall_list = self.stall.tolist()   # plain ints for hot loops
         self.defs = [ins.defs or frozenset() for ins in program]
         self.uses = [ins.uses or frozenset() for ins in program]
         self.sems = [_sems_set(ins) for ins in program]
@@ -235,7 +248,10 @@ class AssemblyGame:
                  input_seed: int = 0,
                  use_fast_mask: bool = True,
                  warm_start: bool = False,
-                 hop_sizes: Tuple[int, ...] = (1,)):
+                 hop_sizes: Tuple[int, ...] = (1,),
+                 use_fast_measure: bool = True,
+                 measure_cache: Optional[Dict[bytes, float]] = None,
+                 checkpoint_every: int = 16):
         # warm_start: BEYOND-PAPER option (EXPERIMENTS.md §Perf): episodes
         # restart from the incumbent best schedule instead of the -O3
         # baseline (iterated-local-search flavor); the paper's vanilla game
@@ -244,6 +260,14 @@ class AssemblyGame:
         # to ``hop`` consecutive single-slot swaps to the same instruction,
         # each individually masked (safety is inherited); the paper's game
         # is hop_sizes=(1,).
+        # use_fast_measure: measure rewards through the timing-only
+        # incremental executor plus a permutation-keyed memo instead of the
+        # dataflow oracle.  Bit-exact (see repro.core.timing), so on by
+        # default; auto-disabled for noisy machines (the memo would freeze
+        # one noise draw) and for Machine subclasses that override run.
+        # measure_cache: share a schedule -> cycles memo across games over
+        # the *same* instruction list (train_on_program's vectorized envs
+        # all measure the same baseline and early-episode schedules).
         self.original = [ins.copy() for ins in program]
         self.machine = machine or Machine()
         self.episode_length = episode_length
@@ -260,6 +284,7 @@ class AssemblyGame:
         self.feature_dim = embedding.feature_dim(self.analysis)
         self.deps = _FastDeps(self.original, self.analysis.stall_table,
                               self.blocks)
+        self._swap_ok: Dict[int, bool] = {}  # ordered-pair static-mask memo
         # instruction content is immutable; only order changes -> embed once
         self._emb = embedding.embed_program(self.original, self.analysis,
                                             n_rows=self.n)
@@ -267,6 +292,19 @@ class AssemblyGame:
         # optimized cubin found throughout the assembly game")
         self.best_cycles = float("inf")
         self.best_program = list(self.original)
+        # fast measurement path: timing-only incremental executor + memo.
+        # Bit-exactness only holds for the stock noise-free Machine.
+        self._fast_measure = (use_fast_measure and self.machine.noise == 0
+                              and type(self.machine).run is Machine.run)
+        self._timer = (ScheduleTimer(self.original, checkpoint_every)
+                       if self._fast_measure else None)
+        self._memo: Dict[bytes, float] = \
+            measure_cache if measure_cache is not None else {}
+        self._prefetched: set = set()
+        self._pending = None
+        self.measure_calls = 0
+        self.memo_hits = 0
+        self.memo_misses = 0
         self._reset_state()
 
     # -- bookkeeping ----------------------------------------------------------
@@ -282,9 +320,17 @@ class AssemblyGame:
         index_of = {id(ins): i for i, ins in enumerate(self.original)}
         ids = np.array([index_of[id(ins)] for ins in self.program])
         self.id_at = ids                          # position -> identity
-        self.pos_of = np.argsort(ids)             # identity -> position
-        self.slot_pos = {k: int(self.pos_of[idx])
+        self._ids = ids.tolist()                  # plain-int mirror of id_at
+        self.pos_of = np.argsort(ids).tolist()    # identity -> position
+        self.slot_pos = {k: self.pos_of[idx]
                          for k, idx in enumerate(self.slots)}
+        self.slot_at = [-1] * self.n              # position -> slot (or -1)
+        for k, pos in self.slot_pos.items():
+            self.slot_at[pos] = k
+        # Algorithm-1 prefix sums (S[x] = stalls of positions < x), kept
+        # incrementally: an adjacent swap at q only changes S[q]
+        self._prefix = \
+            [0] + np.cumsum(self.deps.stall[self.id_at]).tolist()
         self.t = 0
         self._mask_cache: Optional[np.ndarray] = None
         start_cycles = self._measure()
@@ -298,8 +344,23 @@ class AssemblyGame:
         self.history: List[StepRecord] = []
 
     def _measure(self) -> float:
-        return self.machine.run(self.program,
-                                input_seed=self.input_seed).cycles
+        self.measure_calls += 1
+        if self._timer is None:
+            return self.machine.run(self.program,
+                                    input_seed=self.input_seed).cycles
+        key = self.id_at.tobytes()
+        cached = self._memo.get(key)
+        if cached is not None:
+            if key in self._prefetched:        # this env computed it in
+                self._prefetched.discard(key)  # prime_measure: count a miss
+                self.memo_misses += 1
+            else:
+                self.memo_hits += 1
+            return cached
+        self.memo_misses += 1
+        cycles = self._timer.time_ids(self.id_at)
+        self._memo[key] = cycles
+        return cycles
 
     # -- gym interface ----------------------------------------------------------
 
@@ -310,13 +371,26 @@ class AssemblyGame:
     def _obs(self) -> Dict[str, np.ndarray]:
         return {"state": self._emb[self.id_at], "mask": self.action_mask()}
 
+    def write_obs(self, state_out: np.ndarray,
+                  mask_out: Optional[np.ndarray] = None) -> None:
+        """Fill preallocated observation buffers in place (the vectorized
+        rollout path: no per-step (n, feat) allocation).  ``mask_out`` may
+        be wider than ``num_actions``; the excess is zeroed."""
+        np.take(self._emb, self.id_at, axis=0, out=state_out)
+        if mask_out is not None:
+            m = self.action_mask()
+            mask_out[:m.shape[0]] = m
+            mask_out[m.shape[0]:] = 0.0
+
     # -- masking ----------------------------------------------------------------
 
-    def _can_swap_fast(self, p: int, prefix: np.ndarray) -> bool:
-        if p <= 0 or p >= self.n:
-            return False
+    def _pair_static_ok(self, ia: int, ib: int) -> bool:
+        """Position-independent §3.5 checks for "``ia`` directly above
+        ``ib`` may swap": basic-block/sync membership, DMA-group pinning,
+        register dependencies, memory aliasing, barrier waits.  These are
+        functions of the ordered identity *pair* only — invariant under
+        masked swaps — so :meth:`_can_swap_fast` memoizes them."""
         d = self.deps
-        ia, ib = int(self.id_at[p - 1]), int(self.id_at[p])
         if d.block[ia] != d.block[ib] or d.sync[ia] or d.sync[ib]:
             return False
         if d.group[ia] is not None and d.group[ia] == d.group[ib]:
@@ -328,23 +402,37 @@ class AssemblyGame:
             return False
         if d.sems[ia] & d.wait[ib]:
             return False
+        return True
+
+    def _can_swap_fast(self, p: int, prefix) -> bool:
+        if p <= 0 or p >= self.n:
+            return False
+        ids = self._ids
+        ia, ib = ids[p - 1], ids[p]
+        key = ia * self.n + ib
+        ok = self._swap_ok.get(key)
+        if ok is None:
+            ok = self._pair_static_ok(ia, ib)
+            self._swap_ok[key] = ok
+        if not ok:
+            return False
+        d = self.deps
+        pos_of = self.pos_of
         # Algorithm 1 via prefix sums: S[x] = sum of stalls of positions <x
         for (pid, mst) in d.producers[ib]:
-            jpos = int(self.pos_of[pid])
+            jpos = pos_of[pid]
             if jpos >= p - 1:
                 continue  # adjacent producer: already masked by reg dep
-            accum = int(prefix[p - 1] - prefix[jpos])
-            if mst is None or accum < mst:
+            if mst is None or prefix[p - 1] - prefix[jpos] < mst:
                 return False
         if d.fixed[ia] and d.consumers[ia]:
             mst = d.min_st[ia]
-            st_a = int(d.stall[ia])
+            base = d.stall_list[ia] - prefix[p + 1]
             for cid in d.consumers[ia]:
-                cpos = int(self.pos_of[cid])
+                cpos = pos_of[cid]
                 if cpos <= p:
                     continue
-                accum = st_a + int(prefix[cpos] - prefix[p + 1])
-                if mst is None or accum < mst:
+                if mst is None or base + prefix[cpos] < mst:
                     return False
         return True
 
@@ -354,8 +442,7 @@ class AssemblyGame:
         nh = len(self.hop_sizes)
         base = np.zeros(2 * self.m, dtype=np.float32)
         if self.use_fast_mask:
-            stalls = self.deps.stall[self.id_at]
-            prefix = np.concatenate([[0], np.cumsum(stalls)])
+            prefix = self._prefix
             for k in range(self.m):
                 p = self.slot_pos[k]
                 if self._can_swap_fast(p, prefix):
@@ -388,6 +475,20 @@ class AssemblyGame:
             # "If no actions are available, the episode is terminated" (§3.5)
             return self._obs(), 0.0, True, {"cycles": self.prev_cycles,
                                             "terminated": "no_actions"}
+        self.begin_step(action)
+        return self.finish_step()
+
+    def begin_step(self, action: int) -> Optional[bytes]:
+        """Apply the action's swap(s) without measuring (the batched
+        rollout path: the driver collects measurement requests from every
+        env, serves distinct cache misses once through the shared memo,
+        then calls :meth:`finish_step`).
+
+        Returns the memo key of the resulting schedule when a fast-path
+        measurement is still needed, else ``None`` (memo hit / oracle
+        path).  The caller must have handled the empty-mask termination.
+        """
+        mask = self.action_mask()
         if not (0 <= action < self.num_actions) or mask[action] == 0.0:
             raise ValueError(f"invalid (masked) action {action}")
         nh = len(self.hop_sizes)
@@ -395,21 +496,38 @@ class AssemblyGame:
         direction, hop_idx = divmod(rem, nh)
         hops = self.hop_sizes[hop_idx]
         p = self.slot_pos[k]
-        before = self.prev_cycles
         hops_done = 0
-        stalls = self.deps.stall[self.id_at]
-        prefix = np.concatenate([[0], np.cumsum(stalls)])
         for h in range(hops):
             pos = self.slot_pos[k]
             q = pos if direction == 0 else pos + 1
-            if h > 0:
-                stalls = self.deps.stall[self.id_at]
-                prefix = np.concatenate([[0], np.cumsum(stalls)])
-                if not self._can_swap_fast(q, prefix):
-                    break
+            if h > 0 and not self._can_swap_fast(q, self._prefix):
+                break
             self._swap(q)
             hops_done += 1
-        q = self.slot_pos[k] if direction == 0 else self.slot_pos[k] + 1
+        self._pending = (k, direction, p, self.prev_cycles, hops_done)
+        if self._timer is not None:
+            key = self.id_at.tobytes()
+            if key not in self._memo:
+                return key
+        return None
+
+    def prime_measure(self) -> None:
+        """Compute and publish the pending schedule's cycles into the
+        shared memo (called once per distinct ``begin_step`` key by the
+        batched driver, possibly from a worker pool — each env owns its
+        timer, so distinct envs prime concurrently without contention)."""
+        key = self.id_at.tobytes()
+        if key not in self._memo:
+            self._memo[key] = self._timer.time_ids(self.id_at)
+            self._prefetched.add(key)
+
+    def finish_step(self, want_obs: bool = True):
+        """Measure the pending schedule and close out the step begun by
+        :meth:`begin_step`.  ``want_obs=False`` skips building the
+        observation dict (the vectorized driver reads it later through
+        :meth:`write_obs` into preallocated buffers)."""
+        k, direction, p, before, hops_done = self._pending
+        self._pending = None
         cycles = self._measure()
         reward = (before - cycles) / self.t0 * 100.0  # Eq. (3)
         self.prev_cycles = cycles
@@ -421,19 +539,25 @@ class AssemblyGame:
         moved = self.program[self.slot_pos[k]]
         self.history.append(StepRecord(k, direction, p, before, cycles,
                                        moved, hops_done))
-        return self._obs(), float(reward), done, {"cycles": cycles,
-                                                  "best": self.best_cycles}
+        obs = self._obs() if want_obs else None
+        return obs, float(reward), done, {"cycles": cycles,
+                                          "best": self.best_cycles}
 
     def _swap(self, q: int) -> None:
         self.program[q - 1], self.program[q] = self.program[q], self.program[q - 1]
-        ia, ib = self.id_at[q - 1], self.id_at[q]
+        ids = self._ids
+        ia, ib = ids[q - 1], ids[q]
+        ids[q - 1], ids[q] = ib, ia
         self.id_at[q - 1], self.id_at[q] = ib, ia
         self.pos_of[ia], self.pos_of[ib] = q, q - 1
-        for k, pos in self.slot_pos.items():
-            if pos == q - 1:
-                self.slot_pos[k] = q
-            elif pos == q:
-                self.slot_pos[k] = q - 1
+        sa, sb = self.slot_at[q - 1], self.slot_at[q]
+        self.slot_at[q - 1], self.slot_at[q] = sb, sa
+        if sb >= 0:
+            self.slot_pos[sb] = q - 1
+        if sa >= 0:
+            self.slot_pos[sa] = q
+        # only S[q] depends on the relative order of positions q-1 and q
+        self._prefix[q] = self._prefix[q - 1] + self.deps.stall_list[ib]
         self._mask_cache = None
 
     # -- utilities ----------------------------------------------------------------

@@ -6,12 +6,22 @@ kernel schedule and returns the best schedule found across the whole run —
 the file system" (§4.2).  Training statistics (episodic return, approximate
 KL divergence, policy entropy — the paper's Fig. 8 / Fig. 12 time series) are
 collected per update.
+
+The rollout is a single vectorized path bounded by the agent, not the
+simulator: observations are written in place into rollout buffers allocated
+once per run (``AssemblyGame.write_obs``); every env applies its action
+first (``begin_step``) so the step's measurement requests can be served
+*batched* through one schedule->cycles memo shared by all envs — distinct
+cache misses are timed once by the incremental :class:`ScheduleTimer` (and
+optionally on a worker pool) and every other env hits the cache.  Memo
+hit/miss totals are surfaced in each ``GameResult.stats`` row.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -20,8 +30,9 @@ import numpy as np
 from repro.core.env import AssemblyGame
 from repro.core.isa import Instruction
 from repro.core.machine import Machine
-from repro.core.ppo import (PPOConfig, compute_gae, greedy_action, init_agent,
-                            make_update_fn, policy_value, sample_action)
+from repro.core.ppo import (PPOConfig, bootstrap_value, compute_gae,
+                            greedy_action, init_agent, make_update_fn,
+                            sample_action)
 
 
 @dataclasses.dataclass
@@ -42,23 +53,33 @@ class GameResult:
         return self.baseline_cycles / self.best_cycles
 
 
-def _batch_obs(obs_list):
-    return (np.stack([o["state"] for o in obs_list]),
-            np.stack([o["mask"] for o in obs_list]))
-
-
 def train_on_program(program: Sequence[Instruction],
                      stall_db: Optional[Dict[str, int]] = None,
                      cfg: Optional[PPOConfig] = None,
                      machine_factory: Callable[[], Machine] = Machine,
                      log_every: int = 1,
-                     verbose: bool = False) -> GameResult:
+                     verbose: bool = False,
+                     use_fast_measure: bool = True,
+                     measure_workers: Optional[int] = None) -> GameResult:
+    """PPO over ``cfg.num_envs`` vectorized games of one kernel schedule.
+
+    ``use_fast_measure=False`` routes every reward measurement through the
+    full dataflow oracle (``Machine.run``) — the pre-fast-path behaviour,
+    kept for equivalence tests and benchmarking.  ``measure_workers``
+    optionally sizes a thread pool over which distinct measurement cache
+    misses are primed concurrently; the pure-Python timer is GIL-bound, so
+    this pays off only for timing backends that release the GIL — default
+    off.
+    """
     cfg = cfg or PPOConfig()
+    measure_cache: Dict[bytes, float] = {}
     envs = [AssemblyGame(program, stall_db=stall_db,
                          machine=machine_factory(), input_seed=i,
                          episode_length=cfg.episode_length,
                          warm_start=cfg.warm_start,
-                         hop_sizes=cfg.hop_sizes)
+                         hop_sizes=cfg.hop_sizes,
+                         use_fast_measure=use_fast_measure,
+                         measure_cache=measure_cache)
             for i in range(cfg.num_envs)]
     n_rows, feat_dim = envs[0].n, envs[0].feature_dim
     num_actions = max(envs[0].num_actions, 2)
@@ -69,92 +90,133 @@ def train_on_program(program: Sequence[Instruction],
     opt, update_fn = make_update_fn(cfg)
     opt_state = opt.init(params)
 
-    obs_list = [env.reset() for env in envs]
+    pool = (ThreadPoolExecutor(max_workers=measure_workers)
+            if measure_workers and measure_workers > 1 else None)
+
+    for env in envs:
+        env.reset()
     ep_returns = [0.0] * cfg.num_envs
     finished_returns: List[float] = []
     stats: List[Dict] = []
     global_step = 0
 
-    for update in range(cfg.num_updates):
-        T, B = cfg.num_steps, cfg.num_envs
-        buf_state = np.zeros((T, B, n_rows, feat_dim), np.float32)
-        buf_mask = np.zeros((T, B, num_actions), np.float32)
-        buf_action = np.zeros((T, B), np.int32)
-        buf_logprob = np.zeros((T, B), np.float32)
-        buf_reward = np.zeros((T, B), np.float32)
-        buf_done = np.zeros((T, B), np.float32)
-        buf_value = np.zeros((T, B), np.float32)
+    # rollout + bootstrap buffers, allocated once and rewritten in place
+    T, B = cfg.num_steps, cfg.num_envs
+    buf_state = np.zeros((T, B, n_rows, feat_dim), np.float32)
+    buf_mask = np.zeros((T, B, num_actions), np.float32)
+    buf_action = np.zeros((T, B), np.int32)
+    buf_logprob = np.zeros((T, B), np.float32)
+    buf_reward = np.zeros((T, B), np.float32)
+    buf_done = np.zeros((T, B), np.float32)
+    buf_value = np.zeros((T, B), np.float32)
+    boot_state = np.zeros((B, n_rows, feat_dim), np.float32)
+    keys: List[Optional[bytes]] = [None] * B
+    no_act = [False] * B
 
-        for t in range(T):
-            state, mask = _batch_obs(obs_list)
-            if mask.shape[1] < num_actions:  # degenerate tiny action spaces
-                mask = np.pad(mask, ((0, 0), (0, num_actions - mask.shape[1])))
-            key, sk = jax.random.split(key)
-            action, logprob, value = sample_action(params, sk, state, mask)
-            action = np.asarray(action)
-            buf_state[t], buf_mask[t] = state, mask
-            buf_action[t] = action
-            buf_logprob[t] = np.asarray(logprob)
-            buf_value[t] = np.asarray(value)
-            for b, env in enumerate(envs):
-                env_mask = mask[b, :env.num_actions]
-                if env_mask.sum() == 0:
-                    obs, reward, done = env.reset(), 0.0, True
-                else:
+    try:
+        for update in range(cfg.num_updates):
+            for t in range(T):
+                for b, env in enumerate(envs):
+                    env.write_obs(buf_state[t, b], buf_mask[t, b])
+                key, sk = jax.random.split(key)
+                action, logprob, value = sample_action(
+                    params, sk, buf_state[t], buf_mask[t])
+                action = np.asarray(action)
+                buf_action[t] = action
+                buf_logprob[t] = np.asarray(logprob)
+                buf_value[t] = np.asarray(value)
+
+                # apply every env's action first, so this step's measurements
+                # can be served as one batch through the shared memo
+                for b, env in enumerate(envs):
+                    env_mask = buf_mask[t, b, :env.num_actions]
+                    no_act[b] = env_mask.sum() == 0
+                    if no_act[b]:
+                        keys[b] = None
+                        continue
                     a = int(action[b])
                     if a >= env.num_actions or env_mask[a] == 0:
                         a = int(np.argmax(env_mask))  # defensive fallback
-                    obs, reward, done, _ = env.step(a)
-                ep_returns[b] += reward
-                buf_reward[t, b] = reward
-                buf_done[t, b] = float(done)
-                if done:
-                    finished_returns.append(ep_returns[b])
-                    ep_returns[b] = 0.0
-                    obs = env.reset()
-                obs_list[b] = obs
-            global_step += B
+                    keys[b] = env.begin_step(a)
 
-        state, mask = _batch_obs(obs_list)
-        if mask.shape[1] < num_actions:
-            mask = np.pad(mask, ((0, 0), (0, num_actions - mask.shape[1])))
-        _, last_value = jax.jit(policy_value)(params, state)
-        adv, ret = compute_gae(buf_reward, buf_value, buf_done,
-                               np.asarray(last_value),
-                               cfg.gamma, cfg.gae_lambda)
-        batch = {
-            "state": buf_state.reshape(T * B, n_rows, feat_dim),
-            "mask": buf_mask.reshape(T * B, num_actions),
-            "action": buf_action.reshape(T * B),
-            "logprob": buf_logprob.reshape(T * B),
-            "adv": np.asarray(adv).reshape(T * B),
-            "ret": np.asarray(ret).reshape(T * B),
-            "value": buf_value.reshape(T * B),
-        }
-        key, uk = jax.random.split(key)
-        params, opt_state, ustats = update_fn(params, opt_state, batch, uk)
+                seen = set()
+                owners = []          # first env to request each distinct miss
+                for b, kb in enumerate(keys):
+                    if kb is not None and kb not in seen:
+                        seen.add(kb)
+                        owners.append(b)
+                if pool is not None and len(owners) > 1:
+                    list(pool.map(lambda b: envs[b].prime_measure(), owners))
+                else:
+                    for b in owners:
+                        envs[b].prime_measure()
 
-        if update % log_every == 0:
-            recent = finished_returns[-10 * cfg.num_envs:]
-            row = {
-                "update": update,
-                "global_step": global_step,
-                "episodic_return": float(np.mean(recent)) if recent else 0.0,
-                "approx_kl": float(ustats.approx_kl),
-                "entropy": float(ustats.entropy),
-                "policy_loss": float(ustats.policy_loss),
-                "value_loss": float(ustats.value_loss),
-                "clip_frac": float(ustats.clip_frac),
-                "best_cycles": min(env.best_cycles for env in envs),
-                "time": time.time(),
+                for b, env in enumerate(envs):
+                    if no_act[b]:
+                        # "no actions available -> episode terminated" (§3.5)
+                        reward, done = 0.0, True
+                    else:
+                        _, reward, done, _ = env.finish_step(want_obs=False)
+                    ep_returns[b] += reward
+                    buf_reward[t, b] = reward
+                    buf_done[t, b] = float(done)
+                    if done:
+                        finished_returns.append(ep_returns[b])
+                        ep_returns[b] = 0.0
+                        env.reset()
+                global_step += B
+
+            for b, env in enumerate(envs):
+                env.write_obs(boot_state[b])
+            last_value = bootstrap_value(params, boot_state)
+            adv, ret = compute_gae(buf_reward, buf_value, buf_done,
+                                   np.asarray(last_value),
+                                   cfg.gamma, cfg.gae_lambda)
+            batch = {
+                "state": buf_state.reshape(T * B, n_rows, feat_dim),
+                "mask": buf_mask.reshape(T * B, num_actions),
+                "action": buf_action.reshape(T * B),
+                "logprob": buf_logprob.reshape(T * B),
+                "adv": np.asarray(adv).reshape(T * B),
+                "ret": np.asarray(ret).reshape(T * B),
+                "value": buf_value.reshape(T * B),
             }
-            stats.append(row)
-            if verbose:
-                print(f"[game] upd={update} step={global_step} "
-                      f"ret={row['episodic_return']:.3f} "
-                      f"kl={row['approx_kl']:.4f} ent={row['entropy']:.3f} "
-                      f"best={row['best_cycles']:.0f}")
+            key, uk = jax.random.split(key)
+            params, opt_state, ustats = update_fn(params, opt_state, batch, uk)
 
+            if update % log_every == 0:
+                recent = finished_returns[-10 * cfg.num_envs:]
+                measure_calls = sum(e.measure_calls for e in envs)
+                memo_hits = sum(e.memo_hits for e in envs)
+                row = {
+                    "update": update,
+                    "global_step": global_step,
+                    "episodic_return": float(np.mean(recent)) if recent else 0.0,
+                    "approx_kl": float(ustats.approx_kl),
+                    "entropy": float(ustats.entropy),
+                    "policy_loss": float(ustats.policy_loss),
+                    "value_loss": float(ustats.value_loss),
+                    "clip_frac": float(ustats.clip_frac),
+                    "best_cycles": min(env.best_cycles for env in envs),
+                    # reward-loop memo totals (cumulative across the run)
+                    "measure_calls": measure_calls,
+                    "memo_hits": memo_hits,
+                    "memo_misses": sum(e.memo_misses for e in envs),
+                    "memo_hit_rate": memo_hits / max(measure_calls, 1),
+                    "time": time.time(),
+                }
+                stats.append(row)
+                if verbose:
+                    print(f"[game] upd={update} step={global_step} "
+                          f"ret={row['episodic_return']:.3f} "
+                          f"kl={row['approx_kl']:.4f} ent={row['entropy']:.3f} "
+                          f"best={row['best_cycles']:.0f} "
+                          f"memo={row['memo_hit_rate']:.2f}")
+
+    finally:
+        # release measurement workers even when an update raises
+        if pool is not None:
+            pool.shutdown(wait=True)
     best_env = min(envs, key=lambda e: e.best_cycles)
     return GameResult(
         best_program=[ins.copy() for ins in best_env.best_program],

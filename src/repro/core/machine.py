@@ -213,11 +213,38 @@ def _hbm_source_cell(ins: Instruction) -> tuple:
 
 
 class Machine:
-    """Cycle-level scoreboard executor for TSASS programs."""
+    """Cycle-level scoreboard executor for TSASS programs.
+
+    ``run`` is the full-fidelity oracle (timing + dataflow hashes);
+    ``time`` is the timing-only fast path (:mod:`repro.core.timing`),
+    bit-exact against ``run(...).cycles`` and the one the reward loop uses.
+    """
 
     def __init__(self, noise: float = 0.0, seed: int = 0):
         self.noise = noise
         self._rng = random.Random(seed)
+
+    def time(self, program: Sequence[Instruction],
+             input_seed: int = 0) -> float:
+        """Cycle count via the scoreboard rules alone — no dataflow hashes,
+        no delayed stores.  Bit-exact against ``run(program).cycles``
+        (property-tested).  ``input_seed`` is accepted for signature parity
+        with ``run``; timing is independent of input values because reads
+        never stall (no interlocks).  Measurement noise is applied exactly
+        as in ``run`` (and draws from the same RNG stream)."""
+        from repro.core import timing
+        cycles = timing.time_program(program)
+        if self.noise:
+            cycles *= 1.0 + self._rng.gauss(0.0, self.noise)
+        return cycles
+
+    def issue_times(self, program: Sequence[Instruction]) -> List[float]:
+        """Per-instruction issue cycles via the timing-only path (LABELs
+        report the running cycle count).  An ``SCLK`` destination register
+        ends up holding ``int(issue)``, so clock-style microbenchmarks can
+        run here instead of through the dataflow oracle."""
+        from repro.core import timing
+        return timing.issue_times(program)
 
     def run(self, program: Sequence[Instruction], input_seed: int = 0,
             _serialize: bool = False) -> RunResult:

@@ -85,14 +85,20 @@ def clock_based_estimate(opcode: str = "SADD", n: int = 16,
                          machine: Optional[Machine] = None) -> float:
     """Listing-7-style clock measurement: two SCLK reads around an ``n``-long
     back-to-back sequence, average cycles per instruction.  Underestimates
-    (no completion guarantee), motivating the dependency-based method."""
+    (no completion guarantee), motivating the dependency-based method.
+
+    Clock reads are timing-only (an SCLK destination holds ``int(issue)``),
+    so this probe runs on ``Machine.issue_times`` instead of the dataflow
+    oracle; the dependency probes above must keep using ``run`` — observing
+    stale values *is* their measurement principle.
+    """
     machine = machine or Machine()
     prog = [_ins("SCLK", ["R2"], stall=2)]
     for i in range(n):
         prog.append(_ins(opcode, [f"R{10 + 2 * i}", "R4", "R6"], stall=1))
     prog.append(_ins("SCLK", ["R8"], stall=2))
     prog.append(_ins("EXIT", [], stall=1))
-    res = machine.run(prog)
-    t1 = res.reg_values.get("R2", 0)
-    t2 = res.reg_values.get("R8", 0)
+    issue = machine.issue_times(prog)
+    t1 = int(issue[0])        # what the first SCLK wrote to R2
+    t2 = int(issue[n + 1])    # ... second SCLK to R8
     return (t2 - t1) / n

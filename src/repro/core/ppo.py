@@ -153,6 +153,14 @@ def greedy_action(params, state, mask):
     return jnp.argmax(masked_logits(logits, mask), axis=-1), value
 
 
+@jax.jit
+def bootstrap_value(params, state):
+    """Critic-only forward for the GAE bootstrap.  Jitted once here beside
+    ``sample_action``: re-wrapping ``jax.jit(policy_value)`` inside the
+    update loop created a fresh trace cache (and a retrace) every update."""
+    return policy_value(params, state)[1]
+
+
 # ---------------------------------------------------------------------------
 # GAE + update
 # ---------------------------------------------------------------------------

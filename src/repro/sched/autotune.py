@@ -47,7 +47,9 @@ def autotune(make_spec: Callable[[Dict], KernelSpec], configs: List[Dict],
     for cfg in configs:
         spec = make_spec(cfg)
         program = baseline.schedule(lowering.lower(spec))
-        cycles = machine.run(program).cycles
+        # grid points only need cycle counts: timing-only path (bit-exact
+        # against machine.run(program).cycles), no dataflow simulation
+        cycles = machine.time(program)
         work = _work_per_step(spec) * spec.steps
         entries.append(TuneEntry(cfg, cycles, work / max(cycles, 1.0),
                                  len(program)))

@@ -1,0 +1,202 @@
+"""Fast reward loop (timing-only measurement): ``Machine.time`` and the
+incremental ``ScheduleTimer`` must agree *bit-exactly* with the dataflow
+oracle ``Machine.run(...).cycles`` on every schedule a masked game can
+reach, and the assembly game's measurement memo must be invisible to
+rewards under warm starts and macro moves.
+
+The schedule-space property test uses hypothesis when installed and a
+seeded-random sweep otherwise (same driver either way)."""
+
+import numpy as np
+import pytest
+
+from repro.core import Machine
+from repro.core.env import AssemblyGame
+from repro.core.game import train_on_program
+from repro.core.ppo import PPOConfig
+from repro.core.timing import ScheduleTimer
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+_PROP_KERNELS = ("rmsnorm", "softmax", "fused_ff", "bmm")
+
+
+def _walk_and_check(prog, stall_db, seed, hop_sizes=(1,), episodes=2,
+                    steps=24, checkpoint_every=8):
+    """Drive a random masked game on the oracle measurement path; at every
+    visited schedule assert one-shot timing AND incremental re-timing equal
+    the oracle's cycle count exactly.  Returns schedules checked."""
+    m = Machine()
+    env = AssemblyGame(prog, stall_db=stall_db, episode_length=steps,
+                       hop_sizes=hop_sizes, use_fast_measure=False)
+    timer = ScheduleTimer(env.original, checkpoint_every=checkpoint_every)
+    rng = np.random.default_rng(seed)
+    checked = 0
+    for _ in range(episodes):
+        env.reset()
+        for _ in range(steps):
+            va = env.valid_actions()
+            if not va:
+                break
+            env.step(int(rng.choice(va)))
+            truth = m.run(env.program).cycles
+            assert m.time(env.program) == truth
+            assert timer.time_ids(env.id_at) == truth
+            checked += 1
+    assert checked > 0
+    return checked
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           kernel=st.sampled_from(_PROP_KERNELS),
+           hop_sizes=st.sampled_from([(1,), (1, 2, 4)]))
+    def test_time_equals_run_property(seed, kernel, hop_sizes, stall_db,
+                                      kernel_programs):
+        _walk_and_check(kernel_programs[kernel], stall_db, seed,
+                        hop_sizes=hop_sizes)
+
+else:
+
+    @pytest.mark.parametrize("kernel", _PROP_KERNELS)
+    @pytest.mark.parametrize("seed", range(4))
+    def test_time_equals_run_property(kernel, seed, stall_db,
+                                      kernel_programs):
+        hop_sizes = (1, 2, 4) if seed % 2 else (1,)
+        _walk_and_check(kernel_programs[kernel], stall_db, seed,
+                        hop_sizes=hop_sizes)
+
+
+def test_time_matches_run_on_all_baselines(kernel_programs):
+    m = Machine()
+    for name, prog in kernel_programs.items():
+        assert m.time(prog) == m.run(prog).cycles, name
+
+
+def test_time_independent_of_input_seed(kernel_programs):
+    """Timing never reads data values (no interlocks), so ``input_seed``
+    cannot matter — the signature exists only for parity with ``run``."""
+    m = Machine()
+    prog = kernel_programs["rmsnorm"]
+    assert m.time(prog, input_seed=0) == m.time(prog, input_seed=123)
+
+
+def test_time_applies_noise_like_run(kernel_programs):
+    prog = kernel_programs["ssd"]
+    a = Machine(noise=0.05, seed=7).run(prog).cycles
+    b = Machine(noise=0.05, seed=7).time(prog)
+    assert a == b  # same RNG stream, same draw
+
+
+def test_incremental_resume_uses_checkpoints(stall_db, kernel_programs):
+    """A swap at position p must resume from the nearest checkpoint at or
+    below p-1, not from cycle 0."""
+    env = AssemblyGame(kernel_programs["softmax"], stall_db=stall_db,
+                       episode_length=8)
+    env.reset()
+    timer = env._timer
+    k = timer.k
+    nh = len(env.hop_sizes)
+    # pick the valid action whose slot sits deepest in the program
+    va = env.valid_actions()
+    assert va
+    a = max(va, key=lambda x: env.slot_pos[x // (2 * nh)])
+    pos = env.slot_pos[a // (2 * nh)]
+    assert pos > 2 * k, "softmax should have schedulable slots beyond 2K"
+    env.step(a)
+    assert 0 < timer.resumed_from <= pos
+    assert timer.resumed_from == ((pos - 1) // k) * k
+
+
+def test_scheduletimer_rejects_bad_orders(kernel_programs):
+    timer = ScheduleTimer(kernel_programs["bmm"])
+    with pytest.raises(ValueError):
+        timer.time_ids(np.arange(timer.n - 1))
+    with pytest.raises(ValueError):
+        ScheduleTimer(kernel_programs["bmm"], checkpoint_every=0)
+
+
+def test_memo_invisible_under_warm_start_and_hops(stall_db, kernel_programs):
+    """Fast (memoized) and oracle envs must agree step-for-step on rewards,
+    cycles, termination, and the run-global best — under warm starts and
+    hop_sizes=(1,2,4) — and the memo must actually get hits."""
+    prog = kernel_programs["rmsnorm"]
+    for hop_sizes in ((1,), (1, 2), (1, 2, 4)):
+        fast = AssemblyGame(prog, stall_db=stall_db, episode_length=12,
+                            warm_start=True, hop_sizes=hop_sizes)
+        slow = AssemblyGame(prog, stall_db=stall_db, episode_length=12,
+                            warm_start=True, hop_sizes=hop_sizes,
+                            use_fast_measure=False)
+        assert fast._timer is not None and slow._timer is None
+        rng = np.random.default_rng(11)
+        for _ in range(3):
+            fast.reset()
+            slow.reset()
+            while True:
+                va = fast.valid_actions()
+                assert va == slow.valid_actions()
+                if not va:
+                    break
+                a = int(rng.choice(va))
+                _, rf, df, inf_f = fast.step(a)
+                _, rs, ds, inf_s = slow.step(a)
+                assert rf == rs and df == ds
+                assert inf_f["cycles"] == inf_s["cycles"]
+                if df:
+                    break
+        assert fast.best_cycles == slow.best_cycles
+        assert fast.t0 == slow.t0
+        # warm-start resets re-measure the incumbent: guaranteed memo hits
+        assert fast.memo_hits > 0
+        assert fast.memo_hits + fast.memo_misses == fast.measure_calls
+
+
+def test_fast_measure_disabled_for_noisy_machines(stall_db, kernel_programs):
+    """A noisy machine re-draws on every measurement; the memo would freeze
+    one draw, so the fast path must bow out."""
+    env = AssemblyGame(kernel_programs["ssd"], stall_db=stall_db,
+                       machine=Machine(noise=0.05, seed=1))
+    assert env._timer is None
+
+
+def test_shared_memo_across_envs(stall_db, kernel_programs):
+    """train_on_program's envs share one schedule->cycles memo: the second
+    env's baseline measurement must hit the first env's entry."""
+    cache = {}
+    a = AssemblyGame(kernel_programs["bmm"], stall_db=stall_db,
+                     measure_cache=cache, input_seed=0)
+    assert (a.memo_hits, a.memo_misses) == (0, 1)
+    b = AssemblyGame(kernel_programs["bmm"], stall_db=stall_db,
+                     measure_cache=cache, input_seed=1)
+    assert (b.memo_hits, b.memo_misses) == (1, 0)
+    assert len(cache) == 1
+
+
+def test_train_fast_path_reproduces_oracle_result(stall_db, kernel_programs):
+    """Acceptance: same seed/config -> same best_cycles and statistics with
+    measurement through the fast path, the oracle path, and the fast path
+    with a measurement worker pool."""
+    prog = kernel_programs["rmsnorm"]
+    cfg = PPOConfig(total_timesteps=256, num_envs=4, num_steps=32,
+                    episode_length=16, seed=3, warm_start=True)
+    fast = train_on_program(prog, stall_db=stall_db, cfg=cfg)
+    slow = train_on_program(prog, stall_db=stall_db, cfg=cfg,
+                            use_fast_measure=False)
+    pooled = train_on_program(prog, stall_db=stall_db, cfg=cfg,
+                              measure_workers=2)
+    assert fast.best_cycles == slow.best_cycles == pooled.best_cycles
+    assert fast.baseline_cycles == slow.baseline_cycles
+    for key in ("episodic_return", "approx_kl", "entropy", "best_cycles"):
+        assert [r[key] for r in fast.stats] == [r[key] for r in slow.stats]
+        assert [r[key] for r in fast.stats] == [r[key] for r in pooled.stats]
+    # memo totals are surfaced per stats row and consistent
+    last = fast.stats[-1]
+    assert last["measure_calls"] == last["memo_hits"] + last["memo_misses"]
+    assert last["memo_hits"] > 0
+    assert slow.stats[-1]["memo_hits"] == 0  # oracle path: no memo

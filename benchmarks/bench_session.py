@@ -1,0 +1,71 @@
+"""Fleet benchmark for the session API: N kernels through
+``OptimizationSession.optimize_many`` — isolated per-kernel sessions (the
+legacy one-kernel-at-a-time shape, nothing shared) vs one session sharing
+the stall table and the cross-kernel measurement memo.  Reports wall time
+for both, the shared memo's hit rate and its cross-kernel hit count, and
+asserts the measured cycles are identical (sharing is bit-exact).  In the
+CI ``--fast`` smoke set, so BENCH_ci.json tracks the fleet trajectory."""
+
+import tempfile
+import time
+
+from repro.core import build_stall_table
+from repro.core.ppo import PPOConfig
+from repro.kernels import (KERNELS, KernelDef, register_kernel,
+                           unregister_kernel)
+from repro.sched import OptimizationSession, OptimizeRequest
+from benchmarks.common import emit
+
+# rmsnorm appears twice under different workload names — the fleet-dedup
+# scenario (the same kernel serving several models) the memo exists for
+ALIAS = "rmsnorm_fleet_alias"
+FLEET = ("rmsnorm", "softmax", ALIAS)
+
+
+def run(timesteps: int = 256):
+    db = build_stall_table()
+    base = KERNELS["rmsnorm"]
+    register_kernel(KernelDef(ALIAS, base.make_spec, base.configs))
+    ppo = PPOConfig(total_timesteps=timesteps, num_envs=4, num_steps=16,
+                    episode_length=12, seed=0)
+    try:
+        reqs = [OptimizeRequest(kernel=n, ppo=ppo, force=True)
+                for n in FLEET]
+
+        t0 = time.perf_counter()
+        isolated = []
+        for req in reqs:
+            s = OptimizationSession(
+                stall_db=db, cache_dir=tempfile.mkdtemp(prefix="bench_iso_"))
+            isolated.append(s.optimize(req))
+        t_isolated = time.perf_counter() - t0
+
+        shared = OptimizationSession(
+            stall_db=db, cache_dir=tempfile.mkdtemp(prefix="bench_shr_"))
+        t0 = time.perf_counter()
+        fleet = shared.optimize_many(reqs)
+        t_shared = time.perf_counter() - t0
+
+        for a, b in zip(isolated, fleet):   # sharing never changes cycles
+            assert a.artifact.optimized_cycles == b.artifact.optimized_cycles, \
+                (a.kernel, a.artifact.optimized_cycles,
+                 b.artifact.optimized_cycles)
+
+        stats = shared.memo.stats()
+        total = max(stats["hits"] + stats["misses"], 1)
+        hit_rate = stats["hits"] / total
+        speedup = t_isolated / max(t_shared, 1e-9)
+        print(f"# fleet of {len(FLEET)}: isolated {t_isolated:.2f}s vs "
+              f"shared {t_shared:.2f}s ({speedup:.2f}x) | memo "
+              f"{shared.memo.summary()}")
+        rows = [("session_fleet", "+".join(FLEET), len(FLEET), timesteps,
+                 round(t_isolated, 3), round(t_shared, 3), round(speedup, 2),
+                 round(hit_rate, 3), stats["cross_kernel_hits"],
+                 stats["entries"])]
+        emit(rows, header=("bench", "fleet", "n_kernels", "timesteps",
+                           "isolated_s", "shared_s", "speedup",
+                           "memo_hit_rate", "cross_kernel_hits",
+                           "memo_entries"))
+        return rows
+    finally:
+        unregister_kernel(ALIAS)

@@ -45,7 +45,8 @@ def main() -> None:
     from benchmarks import (bench_autotune, bench_kernel_throughput,
                             bench_microbench, bench_moves, bench_reward_loop,
                             bench_rl_sensitivity, bench_roofline,
-                            bench_stall_resolution, bench_workload_analysis)
+                            bench_session, bench_stall_resolution,
+                            bench_workload_analysis)
 
     suites = [
         ("table1_microbench", bench_microbench.run),
@@ -57,6 +58,8 @@ def main() -> None:
         # reward-loop throughput: in the --fast set so the CI bench smoke
         # job records the fast-path trajectory in BENCH_ci.json
         ("reward_loop", bench_reward_loop.run),
+        # fleet sessions: shared-memo optimize_many vs isolated sessions
+        ("session_fleet", bench_session.run),
     ]
     if not args.fast:
         suites += [

@@ -1,43 +1,75 @@
-"""Optimize any registered Pallas kernel's TSASS schedule and trace the
-discovered moves (paper §5.7).
+"""Optimize a fleet of registered Pallas kernels through the session API,
+then deploy from the cache and trace the discovered moves (paper §5.7).
 
-    PYTHONPATH=src python examples/optimize_kernel.py --kernel fused_ff \
-        --timesteps 8192
+    PYTHONPATH=src python examples/optimize_kernel.py \
+        --kernels fused_ff rmsnorm --timesteps 8192
+
+Drives the full redesigned surface end to end: a measurement backend, a
+search strategy, declarative requests through
+``OptimizationSession.optimize_many`` (shared stall table + cross-kernel
+measurement memo), index-based ``deploy()`` (no re-autotune), and — when
+PPO ran — the §5.7 inference replay over the trained policy.
 """
 
 import argparse
 
 from repro.core import build_stall_table
-from repro.core.game import run_inference, train_on_program
+from repro.core.game import run_inference
 from repro.core.moves import lingering_fraction, top_moves
-from repro.core.ppo import PPOConfig
 from repro.kernels import KERNELS
-from repro.sched import lower, schedule
+from repro.sched import (OptimizationSession, OptimizeRequest, lower,
+                         make_budgeted_strategy, schedule)
+from repro.sched.backends import BACKENDS
+from repro.sched.session import STRATEGIES
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--kernel", default="fused_ff", choices=list(KERNELS))
+    ap.add_argument("--kernels", nargs="+", default=["fused_ff"],
+                    choices=list(KERNELS))
+    ap.add_argument("--strategy", default="ppo", choices=sorted(STRATEGIES))
+    ap.add_argument("--backend", default="fast", choices=sorted(BACKENDS))
     ap.add_argument("--timesteps", type=int, default=8192)
     ap.add_argument("--episode-length", type=int, default=96)
+    ap.add_argument("--cache-dir", default=".repro_cache")
+    ap.add_argument("--workers", type=int, default=1)
     args = ap.parse_args()
 
     db = build_stall_table()
-    kdef = KERNELS[args.kernel]
-    o3 = schedule(lower(kdef.make_spec(kdef.configs[0])))
-    cfg = PPOConfig(total_timesteps=args.timesteps, num_envs=8,
-                    num_steps=128, episode_length=args.episode_length)
-    res = train_on_program(o3, stall_db=db, cfg=cfg, verbose=True)
-    print(f"\nbaseline {res.baseline_cycles:.0f} -> best "
-          f"{res.best_cycles:.0f} ({res.improvement:+.2%})")
+    session = OptimizationSession(
+        backend=args.backend,
+        strategy=make_budgeted_strategy(args.strategy,
+                                        timesteps=args.timesteps,
+                                        episode_length=args.episode_length),
+        stall_db=db, cache_dir=args.cache_dir)
+    results = session.optimize_many(
+        [OptimizeRequest(kernel=name, force=True, verbose=True)
+         for name in args.kernels],
+        max_workers=args.workers)
 
-    env = run_inference(o3, res.params, stall_db=db,
-                        episode_length=args.episode_length)
-    print(f"inference episode best: {env.best_cycles:.0f}; "
-          f"lingering fraction {lingering_fraction(env):.2f}")
-    for mv in top_moves(env, k=3):
-        print()
-        print(mv.render())
+    for res in results:
+        art = res.artifact
+        print(f"\n{res.kernel}: baseline {art.baseline_cycles:.0f} -> best "
+              f"{art.optimized_cycles:.0f} cycles "
+              f"({art.speedup:.3f}x, {res.strategy}/{res.backend})")
+    if session.memo is not None:
+        print(f"shared memo: {session.memo.summary()}")
+
+    # deploy-time lookup: pure cache-index read, no autotune, no training
+    art = session.deploy(results[0].kernel)
+    print(f"deploy({results[0].kernel}): {len(art.program)} instructions "
+          f"at {art.optimized_cycles:.0f} cycles from the cache index")
+
+    res = results[0]
+    if res.game is not None:
+        o3 = schedule(lower(KERNELS[res.kernel].make_spec(res.config)))
+        env = run_inference(o3, res.game.params, stall_db=db,
+                            episode_length=args.episode_length)
+        print(f"inference episode best: {env.best_cycles:.0f}; "
+              f"lingering fraction {lingering_fraction(env):.2f}")
+        for mv in top_moves(env, k=3):
+            print()
+            print(mv.render())
 
 
 if __name__ == "__main__":

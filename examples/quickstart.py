@@ -7,12 +7,15 @@
 3. Lower to TSASS, build the -O3 baseline schedule.
 4. Train a (tiny-budget) PPO agent on the assembly game (§3.3-3.7).
 5. Probabilistically verify + cache the optimized schedule (§4.1-4.2).
+
+Steps 2-5 are one ``session.optimize(request)`` call; deployment is an
+index lookup (``session.deploy``) — no retraining, no re-autotune.  The
+old one-kernel ``CuAsmRL`` class survives as a deprecated shim over this.
 """
 
 from repro.core import build_stall_table
 from repro.core.ppo import PPOConfig
-from repro.kernels import KERNELS
-from repro.sched.api import CuAsmRL
+from repro.sched import OptimizationSession, OptimizeRequest
 
 
 def main() -> None:
@@ -20,20 +23,21 @@ def main() -> None:
     db = build_stall_table()
     print("   ", db)
 
-    kdef = KERNELS["rmsnorm"]
     ppo = PPOConfig(total_timesteps=4096, num_envs=8, num_steps=64,
                     episode_length=64, seed=0)
-    opt = CuAsmRL(kdef, ppo=ppo, stall_db=db, cache_dir=".repro_cache")
+    session = OptimizationSession(stall_db=db, cache_dir=".repro_cache")
 
     print("== hierarchical search + assembly game (paper §3) ==")
-    art = opt.optimize(force=True)
+    res = session.optimize(OptimizeRequest(kernel="rmsnorm", ppo=ppo,
+                                           force=True))
+    art = res.artifact
     print(f"   config: {art.config}")
     print(f"   baseline (-O3) cycles : {art.baseline_cycles:.0f}")
     print(f"   CuAsmRL cycles        : {art.optimized_cycles:.0f}")
     print(f"   speedup               : {art.speedup:.3f}x")
 
     print("== deploy-time lookup (paper §4.2) ==")
-    again = opt.deploy()
+    again = session.deploy("rmsnorm")
     print(f"   loaded cached schedule with {len(again.program)} instructions")
 
 

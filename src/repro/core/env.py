@@ -267,7 +267,10 @@ class AssemblyGame:
         # one noise draw) and for Machine subclasses that override run.
         # measure_cache: share a schedule -> cycles memo across games over
         # the *same* instruction list (train_on_program's vectorized envs
-        # all measure the same baseline and early-episode schedules).
+        # all measure the same baseline and early-episode schedules).  A
+        # session backend passes a SharedMeasureMemo view here, which
+        # namespaces the permutation keys by program fingerprint so the
+        # memo is additionally shared across kernels and autotune phases.
         self.original = [ins.copy() for ins in program]
         self.machine = machine or Machine()
         self.episode_length = episode_length
@@ -333,6 +336,11 @@ class AssemblyGame:
             [0] + np.cumsum(self.deps.stall[self.id_at]).tolist()
         self.t = 0
         self._mask_cache: Optional[np.ndarray] = None
+        # incremental masking: per-position swap-ok cache (-1 = dirty).
+        # A swap at q can only change the checks enumerated in _swap, so
+        # everything else survives across steps instead of being recomputed
+        # row-by-row (ROADMAP "incremental mask").
+        self._ok_at = np.full(self.n + 1, -1, np.int8)
         start_cycles = self._measure()
         if not hasattr(self, "t0"):
             self.t0 = start_cycles       # Eq. 3's T_0: pinned to the -O3
@@ -404,6 +412,18 @@ class AssemblyGame:
             return False
         return True
 
+    def _swap_ok_at(self, p: int) -> bool:
+        """Cached "may positions p-1, p swap?" with incremental
+        invalidation: entries survive across steps and only the positions
+        :meth:`_swap` dirties are recomputed."""
+        if p <= 0 or p >= self.n:
+            return False
+        v = self._ok_at[p]
+        if v < 0:
+            v = 1 if self._can_swap_fast(p, self._prefix) else 0
+            self._ok_at[p] = v
+        return bool(v)
+
     def _can_swap_fast(self, p: int, prefix) -> bool:
         if p <= 0 or p >= self.n:
             return False
@@ -442,12 +462,11 @@ class AssemblyGame:
         nh = len(self.hop_sizes)
         base = np.zeros(2 * self.m, dtype=np.float32)
         if self.use_fast_mask:
-            prefix = self._prefix
             for k in range(self.m):
                 p = self.slot_pos[k]
-                if self._can_swap_fast(p, prefix):
+                if self._swap_ok_at(p):
                     base[2 * k] = 1.0
-                if self._can_swap_fast(p + 1, prefix):
+                if self._swap_ok_at(p + 1):
                     base[2 * k + 1] = 1.0
         else:
             for k in range(self.m):
@@ -559,8 +578,55 @@ class AssemblyGame:
         # only S[q] depends on the relative order of positions q-1 and q
         self._prefix[q] = self._prefix[q - 1] + self.deps.stall_list[ib]
         self._mask_cache = None
+        # Incremental invalidation of the per-position swap-ok cache.
+        # A check at position p reads: the identity pair (p-1, p) — changed
+        # only at q-1/q/q+1; prefix sums at p-1, p+1 and at its
+        # producer/consumer positions — an adjacent swap changes only
+        # S[q] (interval sums spanning q are permutation-invariant), which
+        # those checks read iff p ∈ {q-1, q+1} or the producer/consumer
+        # sits exactly at q, i.e. is one of the two moved identities; and
+        # pos_of of its Algorithm-1 producers/consumers — changed only for
+        # the moved identities.  So the dirty set is the three positions
+        # around q plus every check anchored to a moved identity's
+        # dependency partners.
+        ok = self._ok_at
+        n = self.n
+        for p in (q - 1, q, q + 1):
+            if 0 < p < n:
+                ok[p] = -1
+        d = self.deps
+        pos_of = self.pos_of
+        for x in (ia, ib):
+            for cid in d.consumers[x]:          # checks where x is producer
+                pp = pos_of[cid]
+                if 0 < pp < n:
+                    ok[pp] = -1
+            for pid, _ in d.producers[x]:       # checks where x is consumer
+                pp = pos_of[pid] + 1
+                if 0 < pp < n:
+                    ok[pp] = -1
 
     # -- utilities ----------------------------------------------------------------
+
+    def probe_swap(self, q: int) -> float:
+        """Cycles of the schedule with positions ``q-1``/``q`` exchanged,
+        leaving the game state untouched (adjacent swaps are self-inverse).
+        The measurement goes through the normal path (timer + memo, or the
+        oracle), so strategies can candidate-evaluate without stepping."""
+        self._swap(q)
+        try:
+            return self._measure()
+        finally:
+            self._swap(q)
+
+    def action_swap_pos(self, action: int) -> int:
+        """The swap boundary the action's *first* hop exchanges (positions
+        ``pos-1``/``pos``), decoded exactly as :meth:`begin_step` does."""
+        nh = len(self.hop_sizes)
+        k, rem = divmod(int(action), 2 * nh)
+        direction, _ = divmod(rem, nh)
+        p = self.slot_pos[k]
+        return p if direction == 0 else p + 1
 
     def valid_actions(self) -> List[int]:
         return [a for a, v in enumerate(self.action_mask()) if v > 0]

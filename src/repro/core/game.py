@@ -60,7 +60,9 @@ def train_on_program(program: Sequence[Instruction],
                      log_every: int = 1,
                      verbose: bool = False,
                      use_fast_measure: bool = True,
-                     measure_workers: Optional[int] = None) -> GameResult:
+                     measure_workers: Optional[int] = None,
+                     measure_cache: Optional[Dict[bytes, float]] = None
+                     ) -> GameResult:
     """PPO over ``cfg.num_envs`` vectorized games of one kernel schedule.
 
     ``use_fast_measure=False`` routes every reward measurement through the
@@ -69,10 +71,12 @@ def train_on_program(program: Sequence[Instruction],
     optionally sizes a thread pool over which distinct measurement cache
     misses are primed concurrently; the pure-Python timer is GIL-bound, so
     this pays off only for timing backends that release the GIL — default
-    off.
+    off.  ``measure_cache`` injects an external schedule->cycles memo (a
+    session backend's cross-kernel view); default is a fresh run-local one.
     """
     cfg = cfg or PPOConfig()
-    measure_cache: Dict[bytes, float] = {}
+    if measure_cache is None:
+        measure_cache = {}
     envs = [AssemblyGame(program, stall_db=stall_db,
                          machine=machine_factory(), input_seed=i,
                          episode_length=cfg.episode_length,

@@ -1,0 +1,92 @@
+"""Schedule-optimizer launcher: run a kernel fleet through the session API.
+
+    PYTHONPATH=src python -m repro.launch.optimize rmsnorm softmax \
+        --strategy ppo --backend fast --timesteps 4096
+
+    # optimize every kernel an architecture's forward pass leans on
+    PYTHONPATH=src python -m repro.launch.optimize --arch stablelm-3b
+
+    # deploy-time lookup only (no search, no autotune — §4.2 split)
+    PYTHONPATH=src python -m repro.launch.optimize rmsnorm --deploy
+
+Sibling of ``launch.train`` / ``launch.serve``: one session shares the
+stall table and the cross-kernel measurement memo across the whole fleet,
+and finished artifacts land in the spec-hash-indexed schedule cache the
+serving launcher reads back.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.sched import (OptimizationSession, OptimizeRequest,
+                         make_budgeted_strategy)
+from repro.sched.backends import BACKENDS
+from repro.sched.cache import DEFAULT_CACHE_DIR
+from repro.sched.session import STRATEGIES
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("kernels", nargs="*",
+                    help="registry kernel names (see repro.kernels.KERNELS);"
+                         " may be combined with --arch")
+    ap.add_argument("--arch", default=None,
+                    help="optimize the kernel fleet of this architecture "
+                         "(launch.specs.kernel_fleet)")
+    ap.add_argument("--strategy", default="ppo", choices=sorted(STRATEGIES))
+    ap.add_argument("--backend", default="fast", choices=sorted(BACKENDS))
+    ap.add_argument("--cache-dir", default=DEFAULT_CACHE_DIR)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="fleet threads for optimize_many (1 = serial)")
+    ap.add_argument("--timesteps", type=int, default=8192)
+    ap.add_argument("--episode-length", type=int, default=32)
+    ap.add_argument("--force", action="store_true",
+                    help="re-search even when a cached artifact exists")
+    ap.add_argument("--deploy", action="store_true",
+                    help="index lookup only; fails if not optimized yet")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+
+    names = list(args.kernels)
+    if args.arch:
+        from repro.configs import get_config
+        from repro.launch.specs import kernel_fleet
+        names += [k for k in kernel_fleet(get_config(args.arch, reduced=True))
+                  if k not in names]
+    if not names:
+        ap.error("give kernel names and/or --arch")
+    from repro.kernels import get_kernel
+    for name in names:
+        get_kernel(name)               # fail fast on unknown names
+
+    session = OptimizationSession(
+        backend=args.backend,
+        strategy=make_budgeted_strategy(args.strategy,
+                                        timesteps=args.timesteps,
+                                        episode_length=args.episode_length),
+        cache_dir=args.cache_dir)
+    if args.deploy:
+        for name in names:
+            art = session.deploy(name)
+            print(f"[optimize] {name}: cached config {art.config} "
+                  f"{art.baseline_cycles:.0f} -> {art.optimized_cycles:.0f} "
+                  f"cycles ({art.speedup:.3f}x)")
+        return
+
+    results = session.optimize_many(
+        [OptimizeRequest(kernel=n, force=args.force, verbose=args.verbose)
+         for n in names],
+        max_workers=args.workers)
+    for res in results:
+        art = res.artifact
+        tag = "cache" if res.from_cache else res.strategy
+        print(f"[optimize] {res.kernel}: "
+              f"{art.baseline_cycles:.0f} -> {art.optimized_cycles:.0f} "
+              f"cycles ({art.speedup:.3f}x, {tag}, {res.seconds:.1f}s)")
+    if session.memo is not None:
+        print(f"[optimize] shared memo: {session.memo.summary()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,11 +24,22 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--schedule-cache", default=None, metavar="DIR",
+                    help="report the arch's RL-optimized kernel schedules "
+                         "from this cache (index lookup only, no autotune)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full)
     if cfg.family == "encdec":
         raise SystemExit("use examples/serve_decode.py for the enc-dec arch")
+    if args.schedule_cache:
+        from repro.launch.specs import kernel_fleet
+        from repro.serve.engine import schedule_plan
+        for name, art in schedule_plan(kernel_fleet(cfg),
+                                       cache_dir=args.schedule_cache).items():
+            state = (f"{art.speedup:.3f}x ({art.optimized_cycles:.0f} cycles)"
+                     if art is not None else "not optimized (-O3 baseline)")
+            print(f"[serve] schedule {name}: {state}")
     model = for_config(cfg)
     params = model.init_model(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)

@@ -163,3 +163,22 @@ def lowerable(cfg: ModelConfig, shape_name: str, mesh):
         return serve_decode.decode_step(params, caches, token, pos, cfg,
                                         mesh=mesh)
     return serve_step, (p_sds, caches_sds, token_sds, pos_sds)
+
+
+# ---------------------------------------------------------------------------
+# schedule-optimizer fleet
+# ---------------------------------------------------------------------------
+
+def kernel_fleet(cfg: ModelConfig):
+    """Registry names of the schedule-optimizable kernels this config's
+    forward pass leans on — the fleet ``python -m repro.launch.optimize
+    --arch`` feeds to ``OptimizationSession.optimize_many`` and the serving
+    launcher resolves through the schedule cache."""
+    fleet = ["matmul_leakyrelu", "fused_ff"]
+    if cfg.norm == "rmsnorm":
+        fleet.append("rmsnorm")
+    if cfg.family in ("ssm", "hybrid"):
+        fleet.append("ssd")
+    if cfg.family != "ssm":            # attention stacks
+        fleet += ["flash_attention", "softmax", "bmm"]
+    return fleet

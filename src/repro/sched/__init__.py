@@ -1,16 +1,44 @@
 """Compiler-integration layer: Pallas kernel -> TSASS -> assembly game
--> cached optimized schedule (the paper's Triton integration, §4)."""
+-> cached optimized schedule (the paper's Triton integration, §4).
 
-from repro.sched.api import CuAsmRL, KernelDef, TARGET
+The public surface is the session API (:mod:`repro.sched.session`):
+``OptimizationSession`` over pluggable measurement backends
+(:mod:`repro.sched.backends`) and search strategies, with fleet-scale
+``optimize_many`` and index-driven ``deploy``.  ``CuAsmRL`` survives as a
+deprecated one-kernel shim (:mod:`repro.sched.api`).
+"""
+
+from repro.sched.api import CuAsmRL
 from repro.sched.autotune import TuneResult, autotune
+from repro.sched.backends import (BACKENDS, FastTimingBackend, MeasureBackend,
+                                  OracleBackend, PooledBackend,
+                                  SharedMeasureMemo, make_backend)
 from repro.sched.baseline import naive_schedule, schedule
-from repro.sched.cache import Artifact, load, save
+from repro.sched.cache import (TARGET, Artifact, CacheVersionError,
+                               ScheduleCache, load, save)
 from repro.sched.lowering import LoweredKernel, lower
+from repro.sched.session import (STRATEGIES, GreedySwapStrategy, KernelDef,
+                                 OptimizationSession, OptimizeRequest,
+                                 OptimizeResult, PPOStrategy,
+                                 RandomSearchStrategy, SearchOutcome,
+                                 SearchStrategy, make_budgeted_strategy,
+                                 make_strategy)
 from repro.sched.spec import KernelSpec, TileIO
 from repro.sched.verify import probabilistic_test
 
 __all__ = [
+    # session API
+    "OptimizationSession", "OptimizeRequest", "OptimizeResult",
+    "SearchStrategy", "SearchOutcome", "PPOStrategy", "GreedySwapStrategy",
+    "RandomSearchStrategy", "STRATEGIES", "make_strategy",
+    "make_budgeted_strategy",
+    # backends
+    "MeasureBackend", "OracleBackend", "FastTimingBackend", "PooledBackend",
+    "SharedMeasureMemo", "BACKENDS", "make_backend",
+    # cache
+    "Artifact", "ScheduleCache", "CacheVersionError", "load", "save",
+    # legacy + building blocks
     "CuAsmRL", "KernelDef", "TARGET", "TuneResult", "autotune",
-    "naive_schedule", "schedule", "Artifact", "load", "save",
-    "LoweredKernel", "lower", "KernelSpec", "TileIO", "probabilistic_test",
+    "naive_schedule", "schedule", "LoweredKernel", "lower", "KernelSpec",
+    "TileIO", "probabilistic_test",
 ]

@@ -1,44 +1,41 @@
-"""Public API of the schedule optimizer — the ``@cuasmrl.jit`` analogue
-(paper §4.1 Listing 4, §4.2 Listing 5).
+"""Legacy public API of the schedule optimizer — the ``@cuasmrl.jit``
+analogue (paper §4.1 Listing 4, §4.2 Listing 5).
 
-    kdef = repro.kernels.KERNELS["matmul_leakyrelu"]
-    opt  = CuAsmRL(kdef)
-    art  = opt.optimize()          # hierarchical search + assembly game
-    art  = opt.deploy()            # deploy-time lookup, no training
+.. deprecated::
+    ``CuAsmRL`` is now a thin shim over the session API
+    (:mod:`repro.sched.session`); new code should write
 
-Pipeline per kernel: autotune configs (§3.1) -> lower best config to TSASS ->
-baseline -O3 schedule -> PPO assembly game (§3.3-3.7) -> probabilistic
-testing (§4.1) -> cache artifact (§4.2).
+        session = OptimizationSession()
+        res = session.optimize(OptimizeRequest(kernel="matmul_leakyrelu"))
+        art = session.deploy("matmul_leakyrelu")
+
+    The shim keeps every existing caller working unchanged — including the
+    deploy-time fix: ``deploy()`` resolves the chosen config through the
+    cache index instead of re-running autotune (it only falls back to the
+    legacy grid-search lookup for pre-index v1 cache directories).
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Optional
+import warnings
+from typing import Callable, Dict, Optional
 
-from repro.core.game import GameResult, train_on_program
+from repro.core.game import GameResult
 from repro.core.machine import Machine
-from repro.core.microbench import build_stall_table
 from repro.core.ppo import PPOConfig
 from repro.sched import autotune as autotune_mod
-from repro.sched import baseline, cache, lowering, verify
-from repro.sched.spec import KernelSpec
+from repro.sched import cache
+from repro.sched.backends import FastTimingBackend
+from repro.sched.cache import TARGET, ScheduleCache
+from repro.sched.session import (KernelDef, OptimizationSession,
+                                 OptimizeRequest)
 
-TARGET = "tpu-tsass-v1"
-
-
-@dataclasses.dataclass
-class KernelDef:
-    """One optimizable kernel: its Pallas/ref callables plus the schedule
-    spec constructor and the autotuner's configuration space."""
-    name: str
-    make_spec: Callable[[Dict], KernelSpec]
-    configs: List[Dict]
-    pallas_fn: Optional[Callable] = None
-    ref_fn: Optional[Callable] = None
+__all__ = ["CuAsmRL", "KernelDef", "TARGET"]
 
 
 class CuAsmRL:
+    """One-kernel wrapper over :class:`OptimizationSession` (deprecated)."""
+
     def __init__(self, kdef: KernelDef,
                  ppo: Optional[PPOConfig] = None,
                  cache_dir: str = cache.DEFAULT_CACHE_DIR,
@@ -46,66 +43,51 @@ class CuAsmRL:
                  machine_factory: Callable[[], Machine] = Machine,
                  stall_db: Optional[Dict[str, int]] = None,
                  verify_seeds: int = 4):
+        warnings.warn(
+            "CuAsmRL is deprecated; use OptimizationSession.optimize("
+            "OptimizeRequest(kernel=...)) — see repro.sched.session",
+            DeprecationWarning, stacklevel=2)
         self.kdef = kdef
         self.ppo = ppo or PPOConfig()
         self.cache_dir = cache_dir
         self.target = target
         self.machine_factory = machine_factory
-        # Table 1: built once per target by dependency microbenchmarking
-        self.stall_db = stall_db if stall_db is not None else \
-            build_stall_table(machine=machine_factory())
         self.verify_seeds = verify_seeds
+        self.session = OptimizationSession(
+            backend=FastTimingBackend(machine_factory=machine_factory),
+            cache_dir=cache_dir, target=target, stall_db=stall_db,
+            verify_seeds=verify_seeds)
         self.last_game: Optional[GameResult] = None
+
+    @property
+    def stall_db(self) -> Dict[str, int]:
+        # Table 1: built once per target by dependency microbenchmarking
+        return self.session.stall_table()
 
     # ---- §4.2 Listing 5: invoke optimization --------------------------------
 
     def optimize(self, force: bool = False, verbose: bool = False
                  ) -> cache.Artifact:
-        tune = autotune_mod.autotune(self.kdef.make_spec, self.kdef.configs,
-                                     self.machine_factory())
-        cfg = tune.best.config
-        cached = None if force else cache.load(self.kdef.name, self.target,
-                                               cfg, self.cache_dir)
-        if cached is not None:
-            return cached
-
-        spec = self.kdef.make_spec(cfg)
-        lowered = lowering.lower(spec)
-        o3 = baseline.schedule(lowered)
-        game = train_on_program(o3, stall_db=self.stall_db, cfg=self.ppo,
-                                machine_factory=self.machine_factory,
-                                verbose=verbose)
-        self.last_game = game
-
-        check = verify.probabilistic_test(o3, game.best_program,
-                                          n_seeds=self.verify_seeds,
-                                          machine=self.machine_factory())
-        if not check.ok:
-            raise RuntimeError(
-                f"probabilistic testing FAILED for {self.kdef.name}: "
-                f"seeds {check.failures} — masking bug, refusing to cache")
-
-        art = cache.Artifact(
-            kernel=self.kdef.name, target=self.target, config=cfg,
-            program=game.best_program,
-            baseline_cycles=game.baseline_cycles,
-            optimized_cycles=game.best_cycles,
-            meta={
-                "autotune": [dataclasses.asdict(e) for e in tune.entries],
-                "improvement": game.improvement,
-                "ppo_updates": len(game.stats),
-                "verify_seeds": check.n_seeds,
-            })
-        cache.save(art, self.cache_dir)
-        return art
+        res = self.session.optimize(OptimizeRequest(
+            kernel=self.kdef, ppo=self.ppo, force=force, verbose=verbose))
+        if res.game is not None:
+            self.last_game = res.game
+        return res.artifact
 
     # ---- §4.2 Listing 5: deployment lookup ------------------------------------
 
     def deploy(self, load_dir: Optional[str] = None) -> cache.Artifact:
-        tune = autotune_mod.autotune(self.kdef.make_spec, self.kdef.configs,
-                                     self.machine_factory())
-        art = cache.load(self.kdef.name, self.target, tune.best.config,
-                         load_dir or self.cache_dir)
+        sc = (self.session.cache if load_dir is None
+              else ScheduleCache(load_dir, self.target))
+        art = sc.lookup_best(self.kdef.name)
+        if art is None:
+            # pre-index (v1) cache directory: recover the chosen config the
+            # way the legacy class did — by re-running the autotune grid
+            tune = autotune_mod.autotune(self.kdef.make_spec,
+                                         self.kdef.configs,
+                                         self.machine_factory())
+            art = cache.load(self.kdef.name, self.target, tune.best.config,
+                             load_dir or self.cache_dir)
         if art is None:
             raise FileNotFoundError(
                 f"no cached schedule for {self.kdef.name}; run optimize() "

@@ -41,15 +41,21 @@ def _work_per_step(spec: KernelSpec) -> float:
 
 
 def autotune(make_spec: Callable[[Dict], KernelSpec], configs: List[Dict],
-             machine: Optional[Machine] = None) -> TuneResult:
-    machine = machine or Machine()
+             machine: Optional[Machine] = None,
+             time_fn: Optional[Callable] = None) -> TuneResult:
+    """``time_fn`` (program -> cycles) overrides the measurement path — the
+    session injects its backend here so grid timings land in the shared
+    memo; default is the machine's timing-only executor."""
+    if time_fn is None:
+        machine = machine or Machine()
+        time_fn = machine.time
     entries: List[TuneEntry] = []
     for cfg in configs:
         spec = make_spec(cfg)
         program = baseline.schedule(lowering.lower(spec))
         # grid points only need cycle counts: timing-only path (bit-exact
         # against machine.run(program).cycles), no dataflow simulation
-        cycles = machine.time(program)
+        cycles = time_fn(program)
         work = _work_per_step(spec) * spec.steps
         entries.append(TuneEntry(cfg, cycles, work / max(cycles, 1.0),
                                  len(program)))

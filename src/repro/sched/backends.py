@@ -1,0 +1,300 @@
+"""Measurement backends for the optimization session (API redesign).
+
+A :class:`MeasureBackend` answers one question — "how many cycles does this
+schedule take?" — and carries the knobs the assembly game and the autotuner
+need to answer it consistently: a machine factory, whether the timing-only
+fast path applies, how many worker threads may prime measurement misses,
+and (for the fast backends) the **cross-kernel measurement memo**.
+
+The memo (:class:`SharedMeasureMemo`) is the fleet-scale piece: it maps
+``(program fingerprint, position->identity permutation)`` to cycles, where
+the fingerprint is interned from the per-instruction *timing records*
+(:func:`repro.core.timing.time_record`) — the complete timing semantics of
+an instruction identity.  Two kernels whose lowered programs share the same
+record sequence (the same kernel appearing under several registry names /
+workloads in a fleet, re-optimization of an already-seen schedule) therefore
+share every measurement, and ``cross_kernel_hits`` counts reads served by an
+entry another kernel wrote.  Timing is bit-exact and deterministic
+(``tests/test_timing_fast.py``), so sharing never changes measured values —
+only how often they are recomputed.
+
+Backends:
+
+* :class:`OracleBackend` — every measurement through the full dataflow
+  oracle ``Machine.run`` (the pre-fast-path behaviour; reference + noisy /
+  subclassed machines).
+* :class:`FastTimingBackend` — the timing-only path
+  (:class:`repro.core.timing.ScheduleTimer` inside the game, memoized
+  one-shot timing elsewhere) behind the shared memo.
+* :class:`PooledBackend` — FastTiming plus a thread pool over which the
+  batched rollout primes distinct measurement misses concurrently.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.core.isa import Instruction
+from repro.core.machine import Machine
+from repro.core.timing import time_program, time_record
+
+
+# ---------------------------------------------------------------------------
+# cross-kernel measurement memo
+# ---------------------------------------------------------------------------
+
+class _MemoView:
+    """Dict-like view of a :class:`SharedMeasureMemo` for one program.
+
+    Keys are the game's permutation bytes (``id_at.tobytes()``); the view
+    namespaces them under the program's interned fingerprint, so distinct
+    programs can never collide while identical ones (same timing records)
+    share entries.  Implements exactly the mapping surface
+    :class:`repro.core.env.AssemblyGame` uses for its ``measure_cache``.
+    """
+
+    __slots__ = ("_memo", "_fp", "owner")
+
+    def __init__(self, memo: "SharedMeasureMemo", fp: int, owner: str):
+        self._memo = memo
+        self._fp = fp
+        self.owner = owner
+
+    def get(self, key, default=None):
+        entry = self._memo._data.get((self._fp, key))
+        if entry is None:
+            return default
+        cycles, writer = entry
+        self._memo.hits += 1
+        if writer != self.owner:
+            self._memo.cross_kernel_hits += 1
+        return cycles
+
+    def __contains__(self, key) -> bool:
+        return (self._fp, key) in self._memo._data
+
+    def __setitem__(self, key, cycles: float) -> None:
+        self._memo._insert((self._fp, key), (cycles, self.owner))
+
+
+class SharedMeasureMemo:
+    """Schedule -> cycles memo shared across kernels, envs and phases.
+
+    Thread-compatible under the GIL: entry reads/writes are single dict
+    operations and identical values make write races benign; the counters
+    are best-effort under concurrent fleets (exact in the default serial
+    ``optimize_many``).
+
+    ``max_entries`` bounds resident memory over long measurement campaigns
+    (keys are full permutation byte-strings): when exceeded, the oldest
+    eighth of the entries is dropped — eviction only costs re-timing, never
+    correctness.
+    """
+
+    def __init__(self, max_entries: int = 250_000):
+        self._data: Dict[tuple, tuple] = {}
+        self._fp_ids: Dict[tuple, int] = {}   # record-tuple -> interned id
+        self._lock = threading.Lock()
+        self.max_entries = int(max_entries)
+        self.hits = 0
+        self.misses = 0
+        self.cross_kernel_hits = 0
+        self.evictions = 0
+
+    def _insert(self, key: tuple, entry: tuple) -> None:
+        data = self._data
+        if key in data:               # first writer wins; values bit-exact
+            return
+        data[key] = entry
+        self.misses += 1
+        if len(data) > self.max_entries:
+            # dicts preserve insertion order: drop the oldest ~1/8 batch
+            drop = [k for i, k in enumerate(data)
+                    if i < max(1, self.max_entries // 8)]
+            for k in drop:
+                del data[k]
+            self.evictions += len(drop)
+
+    def fingerprint(self, program: Sequence[Instruction]) -> int:
+        """Interned id of the program's timing-record sequence.  Structural:
+        two instruction lists with equal records get the same id."""
+        recs = tuple(time_record(ins) for ins in program)
+        with self._lock:
+            fp = self._fp_ids.get(recs)
+            if fp is None:
+                fp = len(self._fp_ids)
+                self._fp_ids[recs] = fp
+            return fp
+
+    def view(self, program: Sequence[Instruction], owner: str = "") -> _MemoView:
+        return _MemoView(self, self.fingerprint(program), owner)
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "entries": len(self._data),
+            "programs": len(self._fp_ids),
+            "hits": self.hits,
+            "misses": self.misses,
+            "cross_kernel_hits": self.cross_kernel_hits,
+            "evictions": self.evictions,
+        }
+
+    def summary(self) -> str:
+        """One-line human-readable stats (shared by the CLI, examples and
+        benchmarks so the format lives in exactly one place)."""
+        s = self.stats()
+        total = max(s["hits"] + s["misses"], 1)
+        return (f"{s['entries']} entries, {s['hits']}/{total} hits "
+                f"({s['hits'] / total:.1%}), {s['cross_kernel_hits']} "
+                f"cross-kernel")
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+
+# ---------------------------------------------------------------------------
+# backend protocol + implementations
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class MeasureBackend(Protocol):
+    """What a search strategy / the session needs from a measurement path."""
+
+    name: str
+    fast_measure: bool                    # AssemblyGame(use_fast_measure=...)
+    measure_workers: Optional[int]        # train_on_program worker pool size
+
+    def new_machine(self) -> Machine:
+        """A fresh machine (one per env, the legacy ``machine_factory``)."""
+        ...
+
+    def memo_view(self, program: Sequence[Instruction],
+                  owner: str = "") -> Optional[_MemoView]:
+        """Shared-memo view for ``program`` (``None`` = no sharing)."""
+        ...
+
+    def time(self, program: Sequence[Instruction], owner: str = "") -> float:
+        """One-shot cycle count of ``program`` (autotune / baselines)."""
+        ...
+
+    def autotune_time_fn(self, owner: str = "") -> Callable:
+        """A program->cycles callable for one autotune grid sweep."""
+        ...
+
+
+class OracleBackend:
+    """Every measurement through the dataflow oracle ``Machine.run`` — the
+    reference backend, and the only correct one for noisy machines or
+    ``Machine`` subclasses that override ``run``."""
+
+    name = "oracle"
+    fast_measure = False
+    measure_workers: Optional[int] = None
+
+    def __init__(self, machine_factory: Callable[[], Machine] = Machine):
+        self._factory = machine_factory
+
+    def new_machine(self) -> Machine:
+        return self._factory()
+
+    def memo_view(self, program, owner: str = "") -> None:
+        return None
+
+    def time(self, program, owner: str = "") -> float:
+        return self.new_machine().run(program).cycles
+
+    def autotune_time_fn(self, owner: str = "") -> "Callable":
+        # one machine across the whole grid, so a noisy machine draws
+        # independent noise per config (the legacy autotune contract)
+        machine = self.new_machine()
+        return lambda program: machine.run(program).cycles
+
+
+class FastTimingBackend:
+    """Timing-only measurement behind the shared cross-kernel memo.
+
+    Bit-exact against the oracle for the stock noise-free :class:`Machine`
+    (the precondition the game itself checks); for anything else the
+    backend degrades to unmemoized ``machine.time`` and the game falls back
+    to its oracle path, preserving legacy behaviour exactly.
+    """
+
+    name = "fast"
+    fast_measure = True
+    measure_workers: Optional[int] = None
+
+    def __init__(self, machine_factory: Callable[[], Machine] = Machine,
+                 memo: Optional[SharedMeasureMemo] = None):
+        self._factory = machine_factory
+        self.memo = memo if memo is not None else SharedMeasureMemo()
+        self._deterministic: Optional[bool] = None
+
+    def new_machine(self) -> Machine:
+        return self._factory()
+
+    @property
+    def deterministic(self) -> bool:
+        """Memoization is sound iff timing is a pure function of the
+        schedule — same check the game uses before enabling its fast path."""
+        if self._deterministic is None:
+            m = self._factory()
+            self._deterministic = (m.noise == 0
+                                   and type(m).run is Machine.run)
+        return self._deterministic
+
+    def memo_view(self, program, owner: str = "") -> Optional[_MemoView]:
+        if not self.deterministic:
+            return None
+        return self.memo.view(program, owner)
+
+    def time(self, program, owner: str = "") -> float:
+        if not self.deterministic:
+            return self.new_machine().time(program)
+        view = self.memo.view(program, owner)
+        key = np.arange(len(program), dtype=np.int64).tobytes()
+        cycles = view.get(key)
+        if cycles is None:
+            cycles = time_program(program)
+            view[key] = cycles
+        return cycles
+
+    def autotune_time_fn(self, owner: str = "") -> "Callable":
+        if self.deterministic:
+            return lambda program: self.time(program, owner)
+        # noisy / subclassed machine: one machine across the grid so each
+        # config draws fresh noise from the same stream, exactly like the
+        # legacy ``autotune(..., machine=factory())`` path
+        machine = self.new_machine()
+        return machine.time
+
+
+class PooledBackend(FastTimingBackend):
+    """FastTiming plus a measurement worker pool: the batched rollout fans
+    one step's distinct memo misses out over ``workers`` threads (pays off
+    for timing paths that release the GIL; see ``train_on_program``)."""
+
+    name = "pooled"
+
+    def __init__(self, machine_factory: Callable[[], Machine] = Machine,
+                 memo: Optional[SharedMeasureMemo] = None, workers: int = 4):
+        super().__init__(machine_factory, memo)
+        self.measure_workers = int(workers)
+
+
+BACKENDS = {
+    "oracle": OracleBackend,
+    "fast": FastTimingBackend,
+    "pooled": PooledBackend,
+}
+
+
+def make_backend(name: str, **kwargs) -> MeasureBackend:
+    """CLI-facing constructor: ``make_backend("pooled", workers=8)``."""
+    try:
+        cls = BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown backend {name!r}; one of {sorted(BACKENDS)}")
+    return cls(**kwargs)

@@ -6,6 +6,20 @@ lookup.  At deployment ... it invokes a lookup process instead of training."
 
 Artifacts are TSASS text (round-trippable through the parser) plus a JSON
 sidecar with measured cycles, the winning autotune config and provenance.
+
+Format v2 adds two things on top of the original flat files (v1):
+
+* sidecars carry ``"version": 2`` — v1 sidecars (no version field) still
+  load; an unknown version or an unreadable file raises
+  :class:`CacheVersionError` / the underlying parse error **loudly**
+  instead of silently missing;
+* a per-kernel ``index.json`` records every cached config under its
+  spec-hash key plus the *chosen* (autotune-best) config, so deploy-time
+  lookup is a single index read — no re-autotune (the legacy
+  ``CuAsmRL.deploy`` re-ran the whole grid just to recover the key).
+
+:class:`ScheduleCache` wraps the files with an in-memory LRU so repeated
+``deploy()`` / serving lookups are O(1) dict hits.
 """
 
 from __future__ import annotations
@@ -15,12 +29,23 @@ import hashlib
 import json
 import os
 import tempfile
+import threading
+from collections import OrderedDict
 from typing import Dict, List, Optional
 
 from repro.core.isa import Instruction, program_text
 from repro.core.parser import parse_program
 
 DEFAULT_CACHE_DIR = os.environ.get("REPRO_SCHED_CACHE", ".repro_cache")
+TARGET = "tpu-tsass-v1"
+CACHE_VERSION = 2
+_KNOWN_VERSIONS = (1, 2)
+
+
+class CacheVersionError(RuntimeError):
+    """A cache file exists but cannot be trusted (unknown version /
+    malformed payload).  Deliberately loud: a silent miss would retrain and
+    overwrite an artifact that may still be served elsewhere."""
 
 
 @dataclasses.dataclass
@@ -49,34 +74,106 @@ def _paths(cache_dir: str, kernel: str, target: str, config: Dict):
     return os.path.join(d, f"{key}.tsass"), os.path.join(d, f"{key}.json")
 
 
-def save(artifact: Artifact, cache_dir: str = DEFAULT_CACHE_DIR) -> str:
+def _index_path(cache_dir: str, target: str, kernel: str) -> str:
+    return os.path.join(cache_dir, target, kernel, "index.json")
+
+
+def _atomic_write(path: str, payload: str) -> None:
+    # atomic writes: temp + rename (same discipline as the checkpointer)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path))
+    with os.fdopen(fd, "w") as f:
+        f.write(payload)
+    os.replace(tmp, path)
+
+
+def load_index(cache_dir: str, target: str, kernel: str) -> Optional[Dict]:
+    """The kernel's spec-hash index, or ``None`` when never written (pure
+    v1 directory).  Unknown index versions fail loudly."""
+    path = _index_path(cache_dir, target, kernel)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        try:
+            idx = json.load(f)
+        except ValueError as e:
+            raise CacheVersionError(f"corrupt cache index {path}: {e}") from e
+    if idx.get("version") not in _KNOWN_VERSIONS:
+        raise CacheVersionError(
+            f"cache index {path} has unknown version {idx.get('version')!r}")
+    return idx
+
+
+# serializes the index read-modify-write below: concurrent optimize_many
+# threads saving into one kernel's dir must not lose each other's entries
+# (cross-process writers still race benignly — artifacts are content-
+# addressed, only the index merge needs the lock)
+_INDEX_LOCK = threading.Lock()
+
+
+def _update_index(artifact: Artifact, cache_dir: str, best: bool) -> None:
+    path = _index_path(cache_dir, artifact.target, artifact.kernel)
+    with _INDEX_LOCK:
+        try:
+            idx = load_index(cache_dir, artifact.target, artifact.kernel)
+        except CacheVersionError:
+            idx = None                 # rebuild a corrupt index on write
+        if idx is None:
+            idx = {"version": CACHE_VERSION, "kernel": artifact.kernel,
+                   "target": artifact.target, "entries": {}}
+        key = cache_key(artifact.kernel, artifact.target, artifact.config)
+        idx.setdefault("entries", {})[key] = artifact.config
+        if best or "best" not in idx:
+            idx["best"] = {"key": key, "config": artifact.config,
+                           "optimized_cycles": artifact.optimized_cycles}
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        _atomic_write(path, json.dumps(idx, indent=2, sort_keys=True))
+
+
+def save(artifact: Artifact, cache_dir: str = DEFAULT_CACHE_DIR,
+         best: bool = True) -> str:
+    """Write the artifact (v2 sidecar) and record it in the kernel's index.
+    ``best=True`` marks its config as the kernel's chosen one — the config
+    ``deploy()`` resolves without re-running autotune."""
     tsass_path, json_path = _paths(cache_dir, artifact.kernel,
                                    artifact.target, artifact.config)
     os.makedirs(os.path.dirname(tsass_path), exist_ok=True)
-    # atomic writes: temp + rename (same discipline as the checkpointer)
     for path, payload in (
         (tsass_path, program_text(artifact.program) + "\n"),
         (json_path, json.dumps({
+            "version": CACHE_VERSION,
             "kernel": artifact.kernel, "target": artifact.target,
             "config": artifact.config,
             "baseline_cycles": artifact.baseline_cycles,
             "optimized_cycles": artifact.optimized_cycles,
             "meta": artifact.meta}, indent=2)),
     ):
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path))
-        with os.fdopen(fd, "w") as f:
-            f.write(payload)
-        os.replace(tmp, path)
+        _atomic_write(path, payload)
+    _update_index(artifact, cache_dir, best)
     return tsass_path
 
 
 def load(kernel: str, target: str, config: Dict,
          cache_dir: str = DEFAULT_CACHE_DIR) -> Optional[Artifact]:
+    """Load one artifact by (kernel, target, config).  Missing files are a
+    miss (``None``); present-but-untrusted files raise."""
     tsass_path, json_path = _paths(cache_dir, kernel, target, config)
     if not (os.path.exists(tsass_path) and os.path.exists(json_path)):
         return None
+    return _load_files(tsass_path, json_path)
+
+
+def _load_files(tsass_path: str, json_path: str) -> Artifact:
     with open(json_path) as f:
-        meta = json.load(f)
+        try:
+            meta = json.load(f)
+        except ValueError as e:
+            raise CacheVersionError(
+                f"corrupt cache sidecar {json_path}: {e}") from e
+    version = meta.get("version", 1)   # v1 sidecars predate the field
+    if version not in _KNOWN_VERSIONS:
+        raise CacheVersionError(
+            f"cache artifact {json_path} has unknown version {version!r}; "
+            f"refusing to guess (supported: {_KNOWN_VERSIONS})")
     with open(tsass_path) as f:
         program = parse_program(f.read())
     return Artifact(kernel=meta["kernel"], target=meta["target"],
@@ -84,3 +181,120 @@ def load(kernel: str, target: str, config: Dict,
                     baseline_cycles=meta["baseline_cycles"],
                     optimized_cycles=meta["optimized_cycles"],
                     meta=meta.get("meta", {}))
+
+
+class ScheduleCache:
+    """Spec-hash-indexed artifact store with an in-memory LRU (format v2).
+
+    ``lookup_best`` resolves a kernel's chosen config through its index —
+    one file read the first time, a dict hit afterwards — which is what
+    makes ``deploy()`` and serving free of ``autotune``/``Machine`` work.
+    Returned artifacts carry a fresh ``program`` list, so callers may
+    mutate their copy without poisoning the cache.
+    """
+
+    def __init__(self, cache_dir: str = DEFAULT_CACHE_DIR,
+                 target: str = TARGET, lru_size: int = 64):
+        self.cache_dir = cache_dir
+        self.target = target
+        self.lru_size = int(lru_size)
+        self._lru: "OrderedDict[str, Artifact]" = OrderedDict()
+        self._best_cfg: Dict[str, Dict] = {}   # kernel -> resolved config
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.disk_loads = 0
+
+    # -- internals ----------------------------------------------------------
+
+    def _lru_get(self, key: str) -> Optional[Artifact]:
+        with self._lock:
+            art = self._lru.get(key)
+            if art is not None:
+                self._lru.move_to_end(key)
+                self.hits += 1
+            return art
+
+    def _lru_put(self, key: str, art: Artifact) -> None:
+        with self._lock:
+            self._lru[key] = art
+            self._lru.move_to_end(key)
+            while len(self._lru) > self.lru_size:
+                self._lru.popitem(last=False)
+
+    @staticmethod
+    def _fresh(art: Artifact) -> Artifact:
+        return dataclasses.replace(art, program=list(art.program),
+                                   meta=dict(art.meta))
+
+    # -- lookups ------------------------------------------------------------
+
+    def lookup(self, kernel: str, config: Dict) -> Optional[Artifact]:
+        """Artifact for an explicit (kernel, config) pair, LRU-first."""
+        key = cache_key(kernel, self.target, config)
+        art = self._lru_get(key)
+        if art is not None:
+            return self._fresh(art)
+        art = load(kernel, self.target, config, self.cache_dir)
+        if art is None:
+            with self._lock:
+                self.misses += 1
+            return None
+        self.disk_loads += 1
+        self._lru_put(key, art)
+        return self._fresh(art)
+
+    def best_config(self, kernel: str) -> Optional[Dict]:
+        """The kernel's chosen config, memoized after the first index read
+        (refreshed by ``put(best=True)``; external index rewrites need a
+        fresh ScheduleCache to be seen)."""
+        cfg = self._best_cfg.get(kernel)
+        if cfg is not None:
+            return cfg
+        idx = load_index(self.cache_dir, self.target, kernel)
+        if idx is not None and "best" in idx:
+            cfg = idx["best"]["config"]
+            self._best_cfg[kernel] = cfg
+            return cfg
+        return None
+
+    def lookup_best(self, kernel: str) -> Optional[Artifact]:
+        """The kernel's chosen artifact via the index — zero autotune, zero
+        machine execution.  Falls back to the directory listing for pure-v1
+        dirs when exactly one artifact exists (unambiguous); the resolved
+        config is memoized either way, so repeated lookups are LRU hits."""
+        cfg = self.best_config(kernel)
+        if cfg is not None:
+            return self.lookup(kernel, cfg)
+        d = os.path.join(self.cache_dir, self.target, kernel)
+        if os.path.isdir(d):
+            sidecars = sorted(f for f in os.listdir(d)
+                              if f.endswith(".json") and f != "index.json")
+            if len(sidecars) == 1:
+                stem = sidecars[0][:-5]   # the stem IS the spec-hash key
+                art = self._load_stem(d, stem)
+                self._best_cfg[kernel] = art.config
+                self._lru_put(stem, art)
+                return self._fresh(art)
+        with self._lock:
+            self.misses += 1
+        return None
+
+    def _load_stem(self, d: str, stem: str) -> Artifact:
+        self.disk_loads += 1
+        return _load_files(os.path.join(d, f"{stem}.tsass"),
+                           os.path.join(d, f"{stem}.json"))
+
+    # -- writes -------------------------------------------------------------
+
+    def put(self, artifact: Artifact, best: bool = True) -> str:
+        path = save(artifact, self.cache_dir, best=best)
+        key = cache_key(artifact.kernel, self.target, artifact.config)
+        self._lru_put(key, self._fresh(artifact))
+        if best:
+            self._best_cfg[artifact.kernel] = artifact.config
+        return path
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "disk_loads": self.disk_loads, "lru_entries": len(self._lru)}

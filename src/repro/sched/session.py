@@ -1,0 +1,452 @@
+"""The optimization session — backend-pluggable, fleet-scale successor of
+the monolithic ``CuAsmRL`` class (paper §4 "transparent integration",
+re-architected around three small protocols):
+
+* :class:`repro.sched.backends.MeasureBackend` — how schedules are timed
+  (dataflow oracle / timing-only fast path / fast path + worker pool), and
+  the cross-kernel measurement memo;
+* :class:`SearchStrategy` — how the schedule space is searched (PPO over
+  the assembly game, plus cheap greedy-swap and random-search baselines for
+  A/B tests and CI);
+* :class:`OptimizeRequest` / :class:`OptimizeResult` — declarative inputs
+  and outputs replacing the old tangle of constructor kwargs.
+
+:class:`OptimizationSession` owns the per-target stall table (Table 1,
+built once and shared by every kernel), the shared memo (via its backend)
+and a versioned :class:`repro.sched.cache.ScheduleCache`, and exposes
+
+    session = OptimizationSession()
+    res  = session.optimize(OptimizeRequest(kernel="rmsnorm"))
+    fleet = session.optimize_many(["rmsnorm", "softmax", "fused_ff"])
+    art  = session.deploy("rmsnorm")        # index lookup; no autotune,
+                                            # no machine execution
+
+``optimize_many`` runs a whole kernel fleet through one session — serially
+by default (exact memo statistics), or concurrently with ``max_workers`` —
+while every kernel reuses the same stall table and measurement memo.
+Kernel names resolve through the ``@register_kernel`` registry in
+:mod:`repro.kernels`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import (Dict, Iterable, List, Optional, Protocol, Sequence,
+                    Union, runtime_checkable)
+
+import numpy as np
+
+from repro.core.env import AssemblyGame
+from repro.core.game import GameResult, train_on_program
+from repro.core.isa import Instruction
+from repro.core.microbench import build_stall_table
+from repro.core.ppo import PPOConfig
+from repro.sched import autotune as autotune_mod
+from repro.sched import baseline, lowering, verify
+from repro.sched.backends import (FastTimingBackend, MeasureBackend,
+                                  make_backend)
+from repro.sched.cache import DEFAULT_CACHE_DIR, TARGET, Artifact, ScheduleCache
+from repro.sched.spec import KernelSpec
+
+
+@dataclasses.dataclass
+class KernelDef:
+    """One optimizable kernel: its Pallas/ref callables plus the schedule
+    spec constructor and the autotuner's configuration space."""
+    name: str
+    make_spec: "callable"
+    configs: List[Dict]
+    pallas_fn: Optional["callable"] = None
+    ref_fn: Optional["callable"] = None
+
+
+# ---------------------------------------------------------------------------
+# requests / results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class OptimizeRequest:
+    """Declarative description of one kernel optimization.
+
+    ``kernel`` is a registry name or a :class:`KernelDef`; ``config=None``
+    autotunes the kernel's config grid first (§3.1 hierarchical search),
+    a pinned config skips autotune.  ``strategy`` overrides the session
+    default (a name from :data:`STRATEGIES` or a strategy instance);
+    ``ppo`` configures the PPO strategy when it is the one running.
+    """
+    kernel: Union[str, KernelDef]
+    config: Optional[Dict] = None
+    ppo: Optional[PPOConfig] = None
+    strategy: Optional[Union[str, "SearchStrategy"]] = None
+    verify_seeds: Optional[int] = None
+    force: bool = False
+    verbose: bool = False
+
+    @property
+    def kernel_name(self) -> str:
+        return self.kernel if isinstance(self.kernel, str) else self.kernel.name
+
+
+@dataclasses.dataclass
+class OptimizeResult:
+    kernel: str
+    artifact: Artifact
+    config: Dict
+    from_cache: bool
+    strategy: str
+    backend: str
+    stats: List[Dict]                       # per-update / per-step search rows
+    tune: Optional[autotune_mod.TuneResult] = None
+    game: Optional[GameResult] = None       # populated by the PPO strategy
+    seconds: float = 0.0
+
+    @property
+    def speedup(self) -> float:
+        return self.artifact.speedup
+
+
+# ---------------------------------------------------------------------------
+# search strategies
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SearchOutcome:
+    """What any strategy must produce from one program's search."""
+    best_program: List[Instruction]
+    best_cycles: float
+    baseline_cycles: float
+    stats: List[Dict]
+    game: Optional[GameResult] = None
+
+
+@runtime_checkable
+class SearchStrategy(Protocol):
+    name: str
+
+    def search(self, program: Sequence[Instruction], *,
+               stall_db: Dict[str, int], backend: MeasureBackend,
+               owner: str = "", verbose: bool = False) -> SearchOutcome:
+        ...
+
+
+class PPOStrategy:
+    """The paper's assembly game: PPO over vectorized envs
+    (:func:`repro.core.game.train_on_program`), measuring through the
+    backend's machine/memo."""
+
+    name = "ppo"
+
+    def __init__(self, ppo: Optional[PPOConfig] = None):
+        self.ppo = ppo or PPOConfig()
+
+    def search(self, program, *, stall_db, backend, owner="", verbose=False):
+        game = train_on_program(
+            program, stall_db=stall_db, cfg=self.ppo,
+            machine_factory=backend.new_machine,
+            use_fast_measure=backend.fast_measure,
+            measure_workers=backend.measure_workers,
+            measure_cache=backend.memo_view(program, owner),
+            verbose=verbose)
+        return SearchOutcome(best_program=game.best_program,
+                             best_cycles=game.best_cycles,
+                             baseline_cycles=game.baseline_cycles,
+                             stats=game.stats, game=game)
+
+
+def _strategy_env(program, stall_db, backend, owner, episode_length):
+    return AssemblyGame(program, stall_db=stall_db,
+                        machine=backend.new_machine(),
+                        episode_length=episode_length,
+                        use_fast_measure=backend.fast_measure,
+                        measure_cache=backend.memo_view(program, owner))
+
+
+class GreedySwapStrategy:
+    """Steepest-descent baseline: evaluate every currently-legal swap
+    (probe / revert — adjacent swaps are self-inverse), take the best
+    strictly-improving one, stop when none improves or the step budget
+    runs out.  Deterministic; useful for A/B against PPO and in CI."""
+
+    name = "greedy"
+
+    def __init__(self, max_steps: int = 64):
+        self.max_steps = int(max_steps)
+
+    def search(self, program, *, stall_db, backend, owner="", verbose=False):
+        env = _strategy_env(program, stall_db, backend, owner,
+                            episode_length=self.max_steps + 1)
+        env.reset()
+        stats: List[Dict] = []
+        for step in range(self.max_steps):
+            actions = env.valid_actions()
+            best_a, best_c = None, env.prev_cycles
+            for a in actions:
+                c = env.probe_swap(env.action_swap_pos(a))
+                if c < best_c:
+                    best_a, best_c = a, c
+            if best_a is None:
+                break
+            env.step(best_a)
+            stats.append({"step": step, "cycles": best_c,
+                          "candidates": len(actions), "time": time.time()})
+            if verbose:
+                print(f"[greedy] step={step} cycles={best_c:.0f} "
+                      f"(of {len(actions)} candidates)")
+        return SearchOutcome(
+            best_program=[ins.copy() for ins in env.best_program],
+            best_cycles=env.best_cycles, baseline_cycles=env.t0, stats=stats)
+
+
+class RandomSearchStrategy:
+    """Uniform random masked walks with episode restarts — the sanity floor
+    any learned policy must beat."""
+
+    name = "random"
+
+    def __init__(self, episodes: int = 8, episode_length: int = 32,
+                 seed: int = 0):
+        self.episodes = int(episodes)
+        self.episode_length = int(episode_length)
+        self.seed = int(seed)
+
+    def search(self, program, *, stall_db, backend, owner="", verbose=False):
+        env = _strategy_env(program, stall_db, backend, owner,
+                            episode_length=self.episode_length)
+        rng = np.random.default_rng(self.seed)
+        stats: List[Dict] = []
+        for ep in range(self.episodes):
+            env.reset()
+            for _ in range(self.episode_length):
+                actions = env.valid_actions()
+                if not actions:
+                    break
+                _, _, done, _ = env.step(int(rng.choice(actions)))
+                if done:
+                    break
+            stats.append({"episode": ep, "best_cycles": env.best_cycles,
+                          "time": time.time()})
+            if verbose:
+                print(f"[random] ep={ep} best={env.best_cycles:.0f}")
+        return SearchOutcome(
+            best_program=[ins.copy() for ins in env.best_program],
+            best_cycles=env.best_cycles, baseline_cycles=env.t0, stats=stats)
+
+
+STRATEGIES = {
+    "ppo": PPOStrategy,
+    "greedy": GreedySwapStrategy,
+    "random": RandomSearchStrategy,
+}
+
+
+def make_strategy(name: str, **kwargs) -> SearchStrategy:
+    try:
+        cls = STRATEGIES[name]
+    except KeyError:
+        raise KeyError(f"unknown strategy {name!r}; one of {sorted(STRATEGIES)}")
+    return cls(**kwargs)
+
+
+def make_budgeted_strategy(name: str, timesteps: int = 8192,
+                           episode_length: int = 32,
+                           num_envs: int = 8) -> SearchStrategy:
+    """A strategy instance whose search budget honours the launcher-style
+    ``--timesteps`` / ``--episode-length`` flags, for every strategy (not
+    just PPO).  One definition so the CLI, the examples and the CI smoke
+    stay in lockstep: PPO clamps its rollout length to the budget; greedy
+    applies up to one episode of steepest-descent moves; random search
+    spends the timestep budget across restarts."""
+    if name == "ppo":
+        return PPOStrategy(PPOConfig(
+            total_timesteps=timesteps, num_envs=num_envs,
+            num_steps=max(8, min(128, timesteps // num_envs)),
+            episode_length=episode_length))
+    if name == "greedy":
+        return GreedySwapStrategy(max_steps=episode_length)
+    if name == "random":
+        return RandomSearchStrategy(
+            episodes=max(1, timesteps // max(episode_length, 1)),
+            episode_length=episode_length)
+    return make_strategy(name)
+
+
+# ---------------------------------------------------------------------------
+# the session
+# ---------------------------------------------------------------------------
+
+class OptimizationSession:
+    """Fleet-scale optimization driver over pluggable backend + strategy.
+
+    One session amortizes the expensive per-target state across every
+    kernel it optimizes: the microbenchmarked stall table is built once,
+    measurements flow through the backend's shared memo (identical
+    schedules — across envs, autotune/training phases and even kernels —
+    are timed once), and finished artifacts land in a spec-hash-indexed
+    :class:`ScheduleCache` so deployment is pure lookup.
+    """
+
+    def __init__(self, backend: Union[str, MeasureBackend, None] = None,
+                 strategy: Union[str, SearchStrategy] = "ppo",
+                 cache_dir: str = DEFAULT_CACHE_DIR, target: str = TARGET,
+                 stall_db: Optional[Dict[str, int]] = None,
+                 verify_seeds: int = 4,
+                 cache: Optional[ScheduleCache] = None):
+        if backend is None:
+            backend = FastTimingBackend()
+        elif isinstance(backend, str):
+            backend = make_backend(backend)
+        self.backend = backend
+        self.strategy = strategy
+        self.target = target
+        self.verify_seeds = verify_seeds
+        self.cache = cache if cache is not None else \
+            ScheduleCache(cache_dir, target)
+        self._stall_tables: Dict[str, Dict[str, int]] = {}
+        if stall_db is not None:
+            self._stall_tables[target] = stall_db
+        self._stall_lock = threading.Lock()
+
+    # -- shared per-target state ---------------------------------------------
+
+    @property
+    def memo(self):
+        """The backend's cross-kernel measurement memo (``None`` for
+        backends that do not share measurements)."""
+        return getattr(self.backend, "memo", None)
+
+    def stall_table(self, target: Optional[str] = None) -> Dict[str, int]:
+        """Table 1 for ``target``, microbenchmarked once per session."""
+        target = target or self.target
+        with self._stall_lock:
+            db = self._stall_tables.get(target)
+            if db is None:
+                db = build_stall_table(machine=self.backend.new_machine())
+                self._stall_tables[target] = db
+            return db
+
+    # -- resolution -----------------------------------------------------------
+
+    @staticmethod
+    def _resolve_kernel(kernel: Union[str, KernelDef]) -> KernelDef:
+        if isinstance(kernel, KernelDef):
+            return kernel
+        from repro import kernels as kernels_mod   # registry; import cycle
+        return kernels_mod.get_kernel(kernel)
+
+    def _resolve_strategy(self, req: OptimizeRequest) -> SearchStrategy:
+        s = req.strategy if req.strategy is not None else self.strategy
+        if isinstance(s, str):
+            if s == "ppo":
+                return PPOStrategy(req.ppo)
+            return make_strategy(s)
+        if req.ppo is not None and isinstance(s, PPOStrategy):
+            return PPOStrategy(req.ppo)
+        return s
+
+    # -- §4.2 Listing 5: invoke optimization ----------------------------------
+
+    def optimize(self, request: Union[OptimizeRequest, str, KernelDef]
+                 ) -> OptimizeResult:
+        if not isinstance(request, OptimizeRequest):
+            request = OptimizeRequest(kernel=request)
+        t_start = time.time()
+        kdef = self._resolve_kernel(request.kernel)
+        strategy = self._resolve_strategy(request)
+
+        tune = None
+        if request.config is not None:
+            cfg = dict(request.config)
+        else:
+            # §3.1 stage 1 — grid timings flow through the shared memo, so
+            # a fleet re-times each distinct candidate schedule only once
+            tune = autotune_mod.autotune(
+                kdef.make_spec, kdef.configs,
+                time_fn=self.backend.autotune_time_fn(kdef.name))
+            cfg = tune.best.config
+
+        if not request.force:
+            art = self.cache.lookup(kdef.name, cfg)
+            if art is not None:
+                return OptimizeResult(
+                    kernel=kdef.name, artifact=art, config=cfg,
+                    from_cache=True, strategy=strategy.name,
+                    backend=self.backend.name, stats=[], tune=tune,
+                    seconds=time.time() - t_start)
+
+        spec: KernelSpec = kdef.make_spec(cfg)
+        o3 = baseline.schedule(lowering.lower(spec))
+        outcome = strategy.search(o3, stall_db=self.stall_table(),
+                                  backend=self.backend, owner=kdef.name,
+                                  verbose=request.verbose)
+
+        n_seeds = (request.verify_seeds if request.verify_seeds is not None
+                   else self.verify_seeds)
+        check = verify.probabilistic_test(o3, outcome.best_program,
+                                          n_seeds=n_seeds,
+                                          machine=self.backend.new_machine())
+        if not check.ok:
+            raise RuntimeError(
+                f"probabilistic testing FAILED for {kdef.name}: "
+                f"seeds {check.failures} — masking bug, refusing to cache")
+
+        art = Artifact(
+            kernel=kdef.name, target=self.target, config=cfg,
+            program=outcome.best_program,
+            baseline_cycles=outcome.baseline_cycles,
+            optimized_cycles=outcome.best_cycles,
+            meta={
+                "autotune": ([dataclasses.asdict(e) for e in tune.entries]
+                             if tune is not None else []),
+                "improvement": ((outcome.baseline_cycles - outcome.best_cycles)
+                                / outcome.baseline_cycles),
+                "ppo_updates": len(outcome.stats),
+                "verify_seeds": check.n_seeds,
+                "strategy": strategy.name,
+                "backend": self.backend.name,
+            })
+        # a pinned config is an entry, not necessarily the kernel's chosen
+        # deploy config; autotuned runs define (or refresh) the index best
+        self.cache.put(art, best=(request.config is None))
+        return OptimizeResult(
+            kernel=kdef.name, artifact=art, config=cfg, from_cache=False,
+            strategy=strategy.name, backend=self.backend.name,
+            stats=outcome.stats, tune=tune, game=outcome.game,
+            seconds=time.time() - t_start)
+
+    def optimize_many(self,
+                      requests: Iterable[Union[OptimizeRequest, str, KernelDef]],
+                      max_workers: Optional[int] = None) -> List[OptimizeResult]:
+        """Optimize a fleet of kernels through the shared session state.
+
+        Serial by default (memo statistics stay exact); ``max_workers > 1``
+        fans kernels out over a thread pool — measured values are
+        deterministic either way (the memo is bit-exact), only the
+        hit/miss attribution can shift under concurrency.
+        """
+        reqs = [r if isinstance(r, OptimizeRequest) else OptimizeRequest(kernel=r)
+                for r in requests]
+        if max_workers is not None and max_workers > 1 and len(reqs) > 1:
+            self.stall_table()          # build once, not racing in the pool
+            with ThreadPoolExecutor(max_workers=max_workers) as pool:
+                return list(pool.map(self.optimize, reqs))
+        return [self.optimize(r) for r in reqs]
+
+    # -- §4.2 Listing 5: deployment lookup ------------------------------------
+
+    def deploy(self, kernel: Union[str, KernelDef],
+               config: Optional[Dict] = None) -> Artifact:
+        """Deploy-time lookup: resolve the kernel's chosen config through
+        the cache index and return the artifact — **no** autotune, no
+        machine execution (the paper's search/deploy split, minus the
+        legacy bug of re-running the grid search per lookup)."""
+        name = kernel if isinstance(kernel, str) else kernel.name
+        art = (self.cache.lookup(name, config) if config is not None
+               else self.cache.lookup_best(name))
+        if art is None:
+            raise FileNotFoundError(
+                f"no cached schedule for {name}; run optimize() "
+                f"offline first (the paper's search/deploy split)")
+        return art

@@ -8,14 +8,34 @@ token loop is one lax.scan, so serving compiles to a single program.
 
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, Iterable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.dist import sharding as shd
+from repro.sched.cache import (DEFAULT_CACHE_DIR, TARGET, Artifact,
+                               ScheduleCache)
 from repro.serve.decode import decode_step, init_caches
+
+
+def schedule_plan(kernel_names: Iterable[str],
+                  cache_dir: str = DEFAULT_CACHE_DIR,
+                  target: str = TARGET,
+                  cache: Optional[ScheduleCache] = None
+                  ) -> Dict[str, Optional[Artifact]]:
+    """Deploy-time schedule lookup for the engine's kernel fleet.
+
+    Resolves each kernel's RL-optimized TSASS artifact through the v2
+    spec-hash cache index — O(1) per kernel, **no** autotune and no machine
+    execution (the paper's §4.2 search/deploy split).  ``None`` marks a
+    kernel that was never optimized (it serves the -O3 baseline).  An
+    unreadable/unknown-version cache raises loudly rather than silently
+    degrading a production rollout.
+    """
+    sc = cache if cache is not None else ScheduleCache(cache_dir, target)
+    return {name: sc.lookup_best(name) for name in kernel_names}
 
 
 def generate(params: Dict, cfg: ModelConfig, prompt: jax.Array,

@@ -1,0 +1,105 @@
+"""Pipeline-schedule benchmark: gpipe vs 1F1B, with/without the overlapped
+pod reduction.
+
+Two kinds of rows:
+
+* ``pipeline_memory`` — schedule-table accounting (device-free): peak live
+  microbatch activations per stage and the implied peak activation bytes
+  for the reduced stablelm config, gpipe vs 1F1B, across microbatch
+  counts.  This is the number 1F1B exists to shrink (bounded at
+  ``min(S, M)`` vs gpipe's ``M``) and the trajectory BENCH_ci.json tracks.
+  It is the schedule's accounting model — what a runtime retiring
+  activations at each ``B`` op realizes — not a measured XLA allocation
+  (the CPU reproduction's ``jax.grad`` transpose keeps all residuals).
+* ``pipeline_steps`` — measured steps/s of the shard_map train step on a
+  host mesh (needs >= 4 forced host devices, as in the CI bench job):
+  both schedules, and — when 8 devices allow a ``pod`` axis — the
+  compressed pod reduction with the overlapped (per-group, stage-first)
+  issue order vs the monolithic one.
+"""
+
+import time
+
+from benchmarks.common import emit
+
+
+def _steps_per_sec(step, state, batches, steps):
+    state, _ = step(state, batches[0])           # compile outside the clock
+    t0 = time.perf_counter()
+    for i in range(steps):
+        state, metrics = step(state, batches[i % len(batches)])
+    float(metrics["loss"])                       # sync
+    return steps / (time.perf_counter() - t0)
+
+
+def run(steps: int = 4):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.dist.pipeline import SCHEDULES
+    from repro.models import lm
+
+    cfg = get_config("stablelm-3b", reduced=True).replace(n_layers=4)
+    rows = []
+    header = ("bench", "schedule", "n_stages", "n_micro", "peak_live_micro",
+              "peak_act_mb", "bubble", "steps_per_s", "overlap")
+
+    # --- schedule-table accounting (no devices) ----------------------------
+    seq, mb = 128, 2
+    act_bytes = mb * seq * cfg.d_model * jnp.dtype(cfg.dtype).itemsize
+    for n_stages, n_micro in ((4, 8), (4, 16), (8, 32)):
+        for name, cls in sorted(SCHEDULES.items()):
+            sched = cls()
+            peak = sched.peak_live_microbatches(n_micro, n_stages)
+            rows.append(("pipeline_memory", name, n_stages, n_micro, peak,
+                         round(peak * act_bytes / 2**20, 3),
+                         round(sched.bubble_fraction(n_micro, n_stages), 3),
+                         "", ""))
+
+    # --- measured steps/s (forced multi-device hosts only) -----------------
+    n_dev = len(jax.devices())
+    if n_dev >= 4:
+        from repro.data.pipeline import make_data
+        from repro.launch.mesh import make_host_mesh
+        from repro.optim import adamw as adamw_fn, constant_schedule
+        from repro.train.step import (TrainState, init_ef_state,
+                                      make_sharded_train_step, wants_ef)
+
+        cfg = cfg.replace(pipeline_microbatches=4)
+        opt = adamw_fn(constant_schedule(1e-3), weight_decay=0.1,
+                       max_grad_norm=1.0)
+        params = lm.init_model(cfg, jax.random.PRNGKey(0))
+        data = make_data(cfg, 32, 16)   # dp_total=4 on both meshes -> M=4
+        batches = [data.batch_at(i) for i in range(4)]
+
+        meshes = [("", make_host_mesh(pipe=2))]
+        if n_dev >= 8:
+            meshes.append(("pods", make_host_mesh(pipe=2, pods=2)))
+        for tag, mesh in meshes:
+            pods = tag == "pods"
+            for name in sorted(SCHEDULES):
+                for overlap in ((True, False) if pods else (True,)):
+                    ef = (init_ef_state(params, mesh,
+                                        spec_tree=lm.model_spec(cfg))
+                          if pods and wants_ef(cfg, mesh) else None)
+                    state = TrainState(params, opt.init(params),
+                                       jnp.zeros((), jnp.int32), ef)
+                    step = jax.jit(make_sharded_train_step(
+                        cfg, opt, mesh, schedule=name,
+                        overlap_pod_reduce=overlap))
+                    sps = _steps_per_sec(step, state, batches, steps)
+                    sched = SCHEDULES[name]()
+                    peak = sched.peak_live_microbatches(
+                        cfg.pipeline_microbatches, 2)
+                    rows.append((f"pipeline_steps{tag and '_' + tag}",
+                                 name, 2, cfg.pipeline_microbatches, peak,
+                                 "", "", round(sps, 3),
+                                 int(overlap) if pods else ""))
+                    print(f"# {tag or 'pipe'} {name} overlap={overlap}: "
+                          f"{sps:.2f} steps/s")
+    else:
+        print(f"# {n_dev} host device(s): skipping measured steps/s "
+              "(schedule accounting rows only)")
+
+    emit(rows, header=header)
+    return rows

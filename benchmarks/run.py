@@ -43,10 +43,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_autotune, bench_kernel_throughput,
-                            bench_microbench, bench_moves, bench_reward_loop,
-                            bench_rl_sensitivity, bench_roofline,
-                            bench_session, bench_stall_resolution,
-                            bench_workload_analysis)
+                            bench_microbench, bench_moves, bench_pipeline,
+                            bench_reward_loop, bench_rl_sensitivity,
+                            bench_roofline, bench_session,
+                            bench_stall_resolution, bench_workload_analysis)
 
     suites = [
         ("table1_microbench", bench_microbench.run),
@@ -60,6 +60,9 @@ def main() -> None:
         ("reward_loop", bench_reward_loop.run),
         # fleet sessions: shared-memo optimize_many vs isolated sessions
         ("session_fleet", bench_session.run),
+        # pipeline schedules: gpipe vs 1F1B memory/throughput + overlapped
+        # pod reduction (measured rows need the 8-device CI bench env)
+        ("pipeline_schedules", bench_pipeline.run),
     ]
     if not args.fast:
         suites += [

@@ -86,15 +86,24 @@ class ModelConfig:
                                  # sequence-sharded over the model axis (SP)
 
     # distributed train step (train.step.make_sharded_train_step):
-    # pipeline_stages > 1 opts the config into the shard_map gpipe step —
+    # pipeline_stages > 1 opts the config into the shard_map pipeline step —
     # launchers size the mesh's `pipe` axis from it; pipeline_microbatches
-    # is the gpipe M (bubble fraction (S-1)/(M+S-1)); compress_pod_grads
-    # routes the multi-pod gradient reduction through
+    # is the microbatch stream M (bubble fraction (S-1)/(M+S-1));
+    # pipeline_schedule picks the micro-op timetable (dist.pipeline
+    # SCHEDULES): "gpipe" holds all M microbatch activations live per
+    # stage, "1f1b" bounds them at min(S, M) in the schedule's accounting
+    # model (what a runtime that retires activations at each backward
+    # micro-op realizes — see dist.pipeline); compress_pod_grads routes
+    # the multi-pod gradient reduction through
     # dist.compress.compressed_psum (bf16 wire format + error feedback)
-    # instead of a plain fp32 psum.
+    # instead of a plain fp32 psum, and overlap_pod_reduce issues it
+    # per gradient group as the stage grads finalize during the backward
+    # drain (joined at the optimizer update) instead of monolithically.
     pipeline_stages: int = 0
     pipeline_microbatches: int = 4
+    pipeline_schedule: str = "gpipe"
     compress_pod_grads: bool = True
+    overlap_pod_reduce: bool = True
     supported_shapes: Tuple[str, ...] = ("train_4k", "prefill_32k",
                                          "decode_32k")
     shape_skips: Dict[str, str] = dataclasses.field(default_factory=dict)

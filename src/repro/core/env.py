@@ -540,6 +540,18 @@ class AssemblyGame:
             self._memo[key] = self._timer.time_ids(self.id_at)
             self._prefetched.add(key)
 
+    def publish_measure(self, cycles: float) -> None:
+        """Publish an externally timed result for the pending schedule
+        (the batched driver re-times one step's distinct misses through a
+        single :class:`~repro.core.timing.ScheduleTimer` pass —
+        ``ScheduleTimer.time_many`` — and hands each owner env its
+        cycles).  Accounting matches :meth:`prime_measure`: the owner's
+        later :meth:`_measure` read counts as the miss it caused."""
+        key = self.id_at.tobytes()
+        if key not in self._memo:
+            self._memo[key] = cycles
+            self._prefetched.add(key)
+
     def finish_step(self, want_obs: bool = True):
         """Measure the pending schedule and close out the step begun by
         :meth:`begin_step`.  ``want_obs=False`` skips building the

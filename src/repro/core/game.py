@@ -33,6 +33,7 @@ from repro.core.machine import Machine
 from repro.core.ppo import (PPOConfig, bootstrap_value, compute_gae,
                             greedy_action, init_agent, make_update_fn,
                             sample_action)
+from repro.core.timing import ScheduleTimer
 
 
 @dataclasses.dataclass
@@ -96,6 +97,14 @@ def train_on_program(program: Sequence[Instruction],
 
     pool = (ThreadPoolExecutor(max_workers=measure_workers)
             if measure_workers and measure_workers > 1 else None)
+    # batched re-timing: all envs permute the SAME instruction set, so one
+    # step's distinct measurement misses can run through a single dedicated
+    # timer whose checkpoints are shared across the whole batch
+    # (ScheduleTimer.time_many sorts the orders so lexicographic neighbors
+    # resume from each other's prefixes).  A separate timer instance keeps
+    # the envs' own incremental trajectories undisturbed.
+    batch_timer = (ScheduleTimer(envs[0].original)
+                   if pool is None and envs[0]._timer is not None else None)
 
     for env in envs:
         env.reset()
@@ -151,6 +160,11 @@ def train_on_program(program: Sequence[Instruction],
                         owners.append(b)
                 if pool is not None and len(owners) > 1:
                     list(pool.map(lambda b: envs[b].prime_measure(), owners))
+                elif batch_timer is not None and len(owners) > 1:
+                    cycles = batch_timer.time_many(
+                        [envs[b].id_at for b in owners])
+                    for b, c in zip(owners, cycles):
+                        envs[b].publish_measure(c)
                 else:
                     for b in owners:
                         envs[b].prime_measure()

@@ -50,3 +50,32 @@ def compressed_psum(grads, err, axis: str) -> Tuple[object, object]:
     avg = jax.tree.map(
         lambda q: jax.lax.psum(q, axis).astype(jnp.float32) / n, quantized)
     return avg, new_err
+
+
+def compressed_psum_grouped(grads, err, axis: str, group_order):
+    """:func:`compressed_psum` issued as independent per-group reductions.
+
+    ``grads``/``err`` are dicts of subtrees; ``group_order`` lists their
+    keys in *issue order*.  Quantization and reduction are elementwise, so
+    the result is bit-identical to one tree-wide :func:`compressed_psum` —
+    what changes is the program: each group's bf16 buckets enter the HLO as
+    soon as its gradients finalize (the pipeline step lists the stage
+    groups first — their grads finish during the backward drain — then
+    glue), and the join happens at the optimizer update that consumes them.
+    A latency-hiding scheduler can therefore overlap the slow ``pod``-axis
+    wire time of early buckets with the remaining backward work and the
+    next step's fill phase, instead of serializing one monolithic
+    reduction behind the full gradient tree.
+
+    Returns ``(avg, new_err)`` dicts keyed like ``grads``.
+    """
+    missing = set(grads) - set(group_order)
+    if missing:
+        raise ValueError(f"group_order misses gradient groups {missing}")
+    avg: dict = {}
+    new_err: dict = {}
+    for k in group_order:
+        if k not in grads:
+            continue
+        avg[k], new_err[k] = compressed_psum(grads[k], err[k], axis)
+    return avg, new_err

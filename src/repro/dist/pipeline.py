@@ -1,37 +1,341 @@
-"""GPipe microbatch pipelining over a ``pipe`` mesh axis.
+"""Pipeline schedules over a ``pipe`` mesh axis.
 
-``gpipe`` runs ``stage_fn`` S times (one stage per pipeline rank) over M
-microbatches with the classic fill/steady/drain schedule: at step ``t``
-stage ``s`` processes microbatch ``t - s``, and activations hop to the next
-stage through a ring ``ppermute``.  Total ``M + S - 1`` steps, so bubble
-fraction ``(S - 1) / (M + S - 1)`` — the caller picks M accordingly.
+A :class:`PipelineSchedule` is a *schedule table*: for every clock tick it
+says which ``(microbatch, stage, phase)`` micro-ops run, with ``phase`` one
+of ``"F"`` (forward) / ``"B"`` (backward).  The table is the single source
+of truth for three consumers:
 
-Two entry points:
+* **execution** — :meth:`PipelineSchedule.run_local` streams the forward
+  micro-ops from inside an enclosing ``shard_map`` (activations hop between
+  stages through a ring ``ppermute``; the backward ops are realized by
+  ``jax.grad`` transposing the forward stream, so the table's ``B`` entries
+  describe when a real pipelined runtime would retire each microbatch's
+  activations);
+* **memory accounting** — :meth:`peak_live_microbatches` simulates the
+  table (``F`` allocates one stage-activation, ``B`` frees it) and reports
+  the per-stage peak.  GPipe holds all ``M`` microbatches live; 1F1B bounds
+  the peak at ``min(S, M)`` — the whole point of the schedule;
+* **analysis** — :meth:`bubble_fraction` and the schedule diagrams in the
+  README / ``benchmarks/bench_pipeline.py`` render the same table.
 
-* :func:`gpipe` — standalone: wraps the schedule in its own ``shard_map``
-  (stage weights enter stacked ``(S, ...)`` and sharded ``P("pipe")``);
-* :func:`gpipe_local` — the per-device schedule alone, for callers that
-  are *already inside* a ``shard_map`` over a mesh containing ``axis``
-  (the sharded train step composes it with data-parallel gradient
-  collectives this way).
+Two implementations:
 
-Numerics match running the stages sequentially — asserted against that
-oracle by tests/test_dist.py.  The schedule is differentiable: the ring
-``ppermute`` transposes to the inverted ring, so ``jax.grad`` through
-``gpipe_local`` routes activation cotangents backwards stage by stage
-(exactly the 1F1B-style backward traffic).
+* :class:`GPipeSchedule` — fill/steady/drain: at tick ``t`` stage ``s``
+  forwards microbatch ``t - s``; every backward runs after the last
+  forward.  Its ``run_local`` is the original :func:`gpipe_local` loop,
+  bit-exact against the pre-abstraction code.
+* :class:`OneFOneBSchedule` — PipeDream-flush 1F1B: stage ``s`` warms up
+  with ``min(S - s - 1, M)`` forwards, then alternates one-forward /
+  one-backward, then drains the remaining backwards.  Forward micro-ops
+  execute through the generic table-driven runner with a bounded
+  activation ring buffer (capacity derived from the table, ≈ ``min(S,
+  M)``) instead of gpipe's unbounded in-flight window.
+
+Both schedules push every microbatch through the same per-stage math in
+the same microbatch order, so their losses/gradients agree **exactly** —
+only op placement (and therefore live-activation memory) differs.  That
+equivalence and the memory bound are asserted in ``tests/test_dist.py``.
+
+Legacy entry points :func:`gpipe` / :func:`gpipe_local` are kept verbatim;
+``repro.train.step.make_sharded_train_step`` now goes through
+:func:`get_schedule` (``ModelConfig.pipeline_schedule``).
 """
 
 from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 
+@dataclasses.dataclass(frozen=True)
+class MicroOp:
+    """One cell of the schedule table: at ``tick``, ``stage`` runs the
+    ``phase`` ("F"/"B") pass of ``micro``."""
+    tick: int
+    stage: int
+    micro: int
+    phase: str
+
+
+def _table_to_fwd_rows(table: Sequence[MicroOp], n_stages: int
+                       ) -> List[Tuple[int, ...]]:
+    """Compress the table to forward-only rows for the SPMD runner: one row
+    per tick that contains at least one ``F`` op; ``row[s]`` is the micro
+    stage ``s`` forwards that tick (``-1`` = idle).  Dropping forward-empty
+    ticks (pure-backward slots — under ``jax.grad`` the transpose runs
+    them, not the primal loop) preserves the relative order of every
+    ``F`` op, which is all the ring transfer needs."""
+    by_tick: Dict[int, Dict[int, int]] = {}
+    for op in table:
+        if op.phase == "F":
+            by_tick.setdefault(op.tick, {})[op.stage] = op.micro
+    rows = []
+    for t in sorted(by_tick):
+        row = tuple(by_tick[t].get(s, -1) for s in range(n_stages))
+        rows.append(row)
+    # the ring buffer's `micro % capacity` slot assignment is collision-free
+    # only while every stage consumes micros in increasing order (the live
+    # set is then a contiguous window).  gpipe and 1F1B satisfy this; an
+    # interleaved/virtual-stage schedule would not — fail loudly instead of
+    # silently training on an aliased activation.
+    last = [-1] * n_stages
+    for row in rows:
+        for s, m in enumerate(row):
+            if m >= 0:
+                if m <= last[s]:
+                    raise ValueError(
+                        f"schedule forwards micro {m} on stage {s} after "
+                        f"micro {last[s]}: non-monotone forward order is "
+                        "not supported by the ring-buffer runner")
+                last[s] = m
+    return rows
+
+
+def _ring_capacity(rows: Sequence[Tuple[int, ...]], n_stages: int) -> int:
+    """Minimal per-rank activation-buffer capacity for the runner: the max
+    number of microbatches simultaneously resident on any stage (received
+    from the predecessor but not yet consumed).  Micros arrive in order, so
+    ``micro % capacity`` slots never collide at this capacity."""
+    cap = 1
+    for s in range(1, n_stages):
+        produced = {}
+        consumed = {}
+        for t, row in enumerate(rows):
+            if row[s - 1] >= 0:
+                produced[row[s - 1]] = t
+            if row[s] >= 0:
+                consumed[row[s]] = t
+        for t in range(len(rows)):
+            live = sum(1 for m, pt in produced.items()
+                       if pt < t <= consumed.get(m, -1))
+            cap = max(cap, live)
+    return cap
+
+
+def _run_fwd_rows(rows: Sequence[Tuple[int, ...]], stage_fn, stage_weights,
+                  microbatches, *, n_stages: int, axis: str,
+                  replicate_out: bool):
+    """Execute a forward row table from inside a ``shard_map`` over
+    ``axis``.  Same SPMD shape as :func:`gpipe_local` — every rank calls
+    ``stage_fn`` every row (idle ranks compute on don't-care data whose
+    outputs are masked out of the buffer/output writes, so their cotangents
+    are exactly zero) — but produce→consume gaps larger than one tick are
+    carried in a bounded ring buffer instead of a single ``recv`` slot."""
+    n_micro = microbatches.shape[0]
+    stage = jax.lax.axis_index(axis)
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+    cap = _ring_capacity(rows, n_stages)
+    buf = jnp.zeros((cap,) + microbatches.shape[1:], microbatches.dtype)
+    out = jnp.zeros_like(microbatches)
+    recv = jnp.zeros_like(microbatches[0])
+    for t, row in enumerate(rows):
+        if t > 0:
+            # bank the activation ppermuted in at the end of the previous
+            # row under the *sender's* micro index (static per stage)
+            prev = rows[t - 1]
+            recv_micro = jnp.asarray(
+                tuple(prev[s - 1] if s > 0 else -1
+                      for s in range(n_stages)))[stage]
+            slot = jnp.maximum(recv_micro, 0) % cap
+            buf = jnp.where(
+                recv_micro >= 0,
+                jax.lax.dynamic_update_index_in_dim(buf, recv, slot, 0),
+                buf)
+        m_here = jnp.asarray(row)[stage]
+        idx = jnp.maximum(m_here, 0)
+        x0 = jax.lax.dynamic_index_in_dim(
+            microbatches, jnp.minimum(idx, n_micro - 1), 0, keepdims=False)
+        xb = jax.lax.dynamic_index_in_dim(buf, idx % cap, 0, keepdims=False)
+        inp = jnp.where(stage == 0, x0, xb)
+        y = stage_fn(stage_weights, inp)
+        m_last = row[n_stages - 1]
+        if m_last >= 0:  # the last stage finished microbatch m_last
+            out = out.at[m_last].set(
+                jnp.where(stage == n_stages - 1, y, out[m_last]))
+        if t < len(rows) - 1:
+            recv = jax.lax.ppermute(y, axis, perm)
+    out = jnp.where(stage == n_stages - 1, out, jnp.zeros_like(out))
+    if replicate_out:
+        out = jax.lax.psum(out, axis)
+    return out
+
+
+class PipelineSchedule:
+    """Base schedule: subclasses define :meth:`table`; execution, memory
+    accounting and bubble analysis derive from it."""
+
+    name: str = "abstract"
+
+    def table(self, n_micro: int, n_stages: int) -> List[MicroOp]:
+        raise NotImplementedError
+
+    def forward_rows(self, n_micro: int, n_stages: int
+                     ) -> List[Tuple[int, ...]]:
+        """Forward-only rows for the SPMD runner (one row per tick that
+        forwards anything; ``row[s]`` = micro or -1)."""
+        return _table_to_fwd_rows(self.table(n_micro, n_stages), n_stages)
+
+    def peak_live_microbatches(self, n_micro: int, n_stages: int) -> int:
+        """Max microbatch activations simultaneously live on any stage
+        (``F`` allocates, ``B`` frees — the classic pipeline memory
+        model).  Multiply by bytes-per-microbatch-activation for a peak
+        memory estimate (``benchmarks/bench_pipeline.py`` does)."""
+        live = [0] * n_stages
+        peak = 0
+        for op in sorted(self.table(n_micro, n_stages),
+                         key=lambda o: o.tick):
+            live[op.stage] += 1 if op.phase == "F" else -1
+            peak = max(peak, live[op.stage])
+        return peak
+
+    def bubble_fraction(self, n_micro: int, n_stages: int) -> float:
+        """Idle fraction of the busiest-possible schedule: 1 - useful ops /
+        (stages × total ticks)."""
+        table = self.table(n_micro, n_stages)
+        ticks = max(op.tick for op in table) + 1
+        return 1.0 - len(table) / float(n_stages * ticks)
+
+    def run_local(self, stage_fn, stage_weights, microbatches, *,
+                  n_stages: int, axis: str = "pipe",
+                  replicate_out: bool = True):
+        """Run the schedule's forward stream from inside an enclosing
+        ``shard_map`` over ``axis`` (same contract as :func:`gpipe_local`)."""
+        return _run_fwd_rows(
+            self.forward_rows(microbatches.shape[0], n_stages),
+            stage_fn, stage_weights, microbatches,
+            n_stages=n_stages, axis=axis, replicate_out=replicate_out)
+
+    def run(self, stage_fn, stage_weights, microbatches, mesh,
+            axis: str = "pipe"):
+        """Standalone entry point: wraps :meth:`run_local` in its own
+        ``shard_map`` (stage weights stacked ``(S, ...)``, sharded
+        ``P(axis)``) — the generalization of :func:`gpipe`."""
+        n_stages = dict(mesh.shape)[axis]
+        lead = jax.tree.leaves(stage_weights)[0].shape[0]
+        assert lead == n_stages, (
+            f"{self.name}: got {lead} stage weights for a "
+            f"{n_stages}-way '{axis}' axis")
+
+        def local_fn(ws, xs):
+            w = jax.tree.map(lambda a: a[0], ws)
+            return self.run_local(stage_fn, w, xs, n_stages=n_stages,
+                                  axis=axis)
+
+        w_specs = jax.tree.map(lambda _: P(axis), stage_weights)
+        x_specs = jax.tree.map(lambda _: P(), microbatches)
+        fn = jax.shard_map(local_fn, mesh=mesh, in_specs=(w_specs, x_specs),
+                           out_specs=P(), check_vma=False)
+        return fn(stage_weights, microbatches)
+
+
+class GPipeSchedule(PipelineSchedule):
+    """Classic fill/steady/drain: all forwards, then all backwards.
+    ``run_local`` is the original :func:`gpipe_local` loop — bit-exact
+    against the pre-abstraction pipeline step."""
+
+    name = "gpipe"
+
+    def table(self, n_micro: int, n_stages: int) -> List[MicroOp]:
+        ops = [MicroOp(s + m, s, m, "F")
+               for s in range(n_stages) for m in range(n_micro)]
+        t_fwd = n_micro + n_stages - 1  # every forward done before any B
+        ops += [MicroOp(t_fwd + (n_stages - 1 - s) + (n_micro - 1 - m),
+                        s, m, "B")
+                for s in range(n_stages) for m in range(n_micro)]
+        return ops
+
+    def run_local(self, stage_fn, stage_weights, microbatches, *,
+                  n_stages: int, axis: str = "pipe",
+                  replicate_out: bool = True):
+        return gpipe_local(stage_fn, stage_weights, microbatches,
+                           n_stages=n_stages, axis=axis,
+                           replicate_out=replicate_out)
+
+
+class OneFOneBSchedule(PipelineSchedule):
+    """PipeDream-flush 1F1B: bounded in-flight activations.
+
+    Per stage ``s``: ``min(S - s - 1, M)`` warmup forwards, then strict
+    one-forward/one-backward alternation, then the remaining backwards.
+    Tick placement comes from a greedy list-scheduling pass over the
+    dependency DAG (``F(s, m)`` after ``F(s-1, m)``; ``B(s, m)`` after
+    ``B(s+1, m)`` and, on the last stage, after ``F(S-1, m)``; one op per
+    stage per tick) — the standard synchronous 1F1B timetable."""
+
+    name = "1f1b"
+
+    def table(self, n_micro: int, n_stages: int) -> List[MicroOp]:
+        seqs = []
+        for s in range(n_stages):
+            warmup = min(n_stages - s - 1, n_micro)
+            seq = [("F", m) for m in range(warmup)]
+            b = 0
+            for m in range(warmup, n_micro):
+                seq.append(("F", m))
+                seq.append(("B", b))
+                b += 1
+            seq += [("B", m) for m in range(b, n_micro)]
+            seqs.append(seq)
+
+        ptr = [0] * n_stages
+        done: Dict[tuple, int] = {}
+        ops: List[MicroOp] = []
+        total = sum(len(q) for q in seqs)
+        t = 0
+        while len(ops) < total:
+            if t > 4 * (n_micro + n_stages) + 8:
+                raise RuntimeError(
+                    f"1f1b schedule did not converge for M={n_micro}, "
+                    f"S={n_stages}")  # pragma: no cover - scheduler bug net
+            for s in range(n_stages):
+                if ptr[s] >= len(seqs[s]):
+                    continue
+                phase, m = seqs[s][ptr[s]]
+                if phase == "F":
+                    ready = s == 0 or done.get(("F", s - 1, m), t) < t
+                elif s == n_stages - 1:
+                    ready = done.get(("F", s, m), t) < t
+                else:
+                    ready = done.get(("B", s + 1, m), t) < t
+                if ready:
+                    done[(phase, s, m)] = t
+                    ops.append(MicroOp(t, s, m, phase))
+                    ptr[s] += 1
+            t += 1
+        return ops
+
+
+SCHEDULES = {
+    "gpipe": GPipeSchedule,
+    "1f1b": OneFOneBSchedule,
+}
+
+
+def get_schedule(name) -> PipelineSchedule:
+    """Resolve a schedule by name (or pass a :class:`PipelineSchedule`
+    instance through).  Raises ``ValueError`` listing the valid choices —
+    launchers surface this eagerly, before any tracing."""
+    if isinstance(name, PipelineSchedule):
+        return name
+    try:
+        return SCHEDULES[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown pipeline schedule {name!r}; valid choices: "
+            f"{sorted(SCHEDULES)}") from None
+
+
+# ---------------------------------------------------------------------------
+# legacy entry points (PR-2 API): the gpipe loop, verbatim
+# ---------------------------------------------------------------------------
+
 def gpipe_local(stage_fn, stage_weights, microbatches, *, n_stages: int,
                 axis: str = "pipe", replicate_out: bool = True):
-    """Run the fill/steady/drain schedule from inside an enclosing
+    """Run the gpipe fill/steady/drain schedule from inside an enclosing
     ``shard_map`` over ``axis``.
 
     Args:
@@ -75,32 +379,8 @@ def gpipe_local(stage_fn, stage_weights, microbatches, *, n_stages: int,
 
 
 def gpipe(stage_fn, stage_weights, microbatches, mesh, axis: str = "pipe"):
-    """Pipeline-parallel application of ``S`` sequential stages.
-
-    Args:
-      stage_fn: ``(w, x) -> y`` for one stage; ``x``/``y`` shaped (mb, d).
-      stage_weights: pytree whose leaves are stacked (S, ...) per-stage
-        weights; sharded one stage per rank over ``axis``.
-      microbatches: (M, mb, d) input microbatches (replicated; only stage 0
-        reads them).
-      mesh: mesh containing ``axis`` with size S.
-      axis: pipeline mesh axis name.
-
-    Returns:
-      (M, mb, d) outputs of the final stage, replicated over ``axis``.
-    """
-    n_stages = dict(mesh.shape)[axis]
-    lead = jax.tree.leaves(stage_weights)[0].shape[0]
-    assert lead == n_stages, (
-        f"gpipe: got {lead} stage weights for a {n_stages}-way '{axis}' axis")
-
-    def local_fn(ws, xs):
-        # ws: (1, ...) — this rank's stage; xs: (M, mb, d) — full stream
-        w = jax.tree.map(lambda a: a[0], ws)
-        return gpipe_local(stage_fn, w, xs, n_stages=n_stages, axis=axis)
-
-    w_specs = jax.tree.map(lambda _: P(axis), stage_weights)
-    x_specs = jax.tree.map(lambda _: P(), microbatches)
-    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=(w_specs, x_specs),
-                       out_specs=P(), check_vma=False)
-    return fn(stage_weights, microbatches)
+    """Pipeline-parallel application of ``S`` sequential stages with the
+    gpipe schedule (standalone ``shard_map`` wrapper; see
+    :meth:`PipelineSchedule.run` for the schedule-generic form)."""
+    return GPipeSchedule().run(stage_fn, stage_weights, microbatches, mesh,
+                               axis=axis)

@@ -134,26 +134,56 @@ def logical_specs(spec_tree, mesh):
 # final norm, lm head) and stays replicated across the pipe axis.
 STAGE_KEYS: Tuple[str, ...] = ("layers",)
 
+# logical axes the explicit-TP pipeline step shards over ``model``: the
+# attention head / MLP column dims whose partial projections the stage body
+# reassembles with an in-stage psum (``repro.nn`` ``tp_axis`` paths).  No
+# divisibility fallback here — ``make_sharded_train_step`` validates the
+# dims eagerly, because a silently replicated leaf would make the stage's
+# unconditional psum double-count.
+TP_STAGE_AXES: Tuple[str, ...] = ("mlp", "heads", "kv_heads")
 
-def sharded_param_specs(params_tree, stage_keys: Sequence[str] = STAGE_KEYS):
+
+def _stage_leaf_spec(leaf, tp: bool) -> P:
+    if not tp:
+        return P("pipe")
+    if not _is_param_spec(leaf):
+        raise TypeError(
+            "sharded_param_specs needs a ParamSpec tree (logical axes) to "
+            "compose pipe with tensor parallelism; got a bare array leaf")
+    parts = ["pipe" if i == 0 and ax == "layers"
+             else ("model" if ax in TP_STAGE_AXES else None)
+             for i, ax in enumerate(leaf.axes)]
+    return P(*parts)
+
+
+def sharded_param_specs(params_tree, stage_keys: Sequence[str] = STAGE_KEYS,
+                        mesh=None):
     """PartitionSpec tree for the shard_map train step's parameters: stacked
     per-layer leaves shard their leading (layer) dim over ``pipe``; glue
-    parameters are replicated (plain DP — the pipeline step does not compose
-    with tensor parallelism).  Accepts a params tree or a ParamSpec tree."""
+    parameters are replicated across ``pipe`` (and ``model``).  When
+    ``mesh`` carries a ``model`` axis of size > 1, stage leaves additionally
+    shard their :data:`TP_STAGE_AXES` dims over ``model`` — the weight
+    layout of the TP-composable stage bodies.  Accepts a params tree or a
+    ParamSpec tree (the latter is required for TP, which needs the logical
+    axes)."""
+    tp = mesh is not None and model_size(mesh) > 1
+
     def sub(key, tree):
-        spec = P("pipe") if key in stage_keys else P()
-        return jax.tree.map(lambda _: spec, tree, is_leaf=_is_param_spec)
+        if key in stage_keys:
+            return jax.tree.map(lambda s: _stage_leaf_spec(s, tp), tree,
+                                is_leaf=_is_param_spec)
+        return jax.tree.map(lambda _: P(), tree, is_leaf=_is_param_spec)
     return {k: sub(k, v) for k, v in params_tree.items()}
 
 
-def sharded_ef_specs(params_tree, stage_keys: Sequence[str] = STAGE_KEYS):
+def sharded_ef_specs(params_tree, stage_keys: Sequence[str] = STAGE_KEYS,
+                     mesh=None):
     """PartitionSpec tree for the compressed-psum error-feedback residuals:
-    each leaf carries a leading ``pod``-block dim (the residual is local to
-    a pod rank), and stage leaves additionally split layers over ``pipe``."""
-    def sub(key, tree):
-        spec = P("pod", "pipe") if key in stage_keys else P("pod")
-        return jax.tree.map(lambda _: spec, tree, is_leaf=_is_param_spec)
-    return {k: sub(k, v) for k, v in params_tree.items()}
+    each leaf is its parameter's spec (:func:`sharded_param_specs`) with a
+    leading ``pod``-block dim prepended — the residual is local to a pod
+    rank, and mirrors the parameter/gradient sharding underneath."""
+    p_specs = sharded_param_specs(params_tree, stage_keys, mesh)
+    return jax.tree.map(lambda sp: P("pod", *sp), p_specs)
 
 
 # ---------------------------------------------------------------------------

@@ -18,12 +18,15 @@ serving launcher reads back.
 from __future__ import annotations
 
 import argparse
+import os
 
 from repro.sched import (OptimizationSession, OptimizeRequest,
                          make_budgeted_strategy)
-from repro.sched.backends import BACKENDS
+from repro.sched.backends import BACKENDS, make_backend
 from repro.sched.cache import DEFAULT_CACHE_DIR
 from repro.sched.session import STRATEGIES
+
+MEMO_FILENAME = "measure_memo.pkl"
 
 
 def main() -> None:
@@ -37,6 +40,11 @@ def main() -> None:
     ap.add_argument("--strategy", default="ppo", choices=sorted(STRATEGIES))
     ap.add_argument("--backend", default="fast", choices=sorted(BACKENDS))
     ap.add_argument("--cache-dir", default=DEFAULT_CACHE_DIR)
+    ap.add_argument("--memo-dir", default=None,
+                    help="persist the cross-kernel measurement memo here "
+                         f"({MEMO_FILENAME}): campaigns warm-start from "
+                         "prior measurements and save back on completion "
+                         "(fast/pooled backends)")
     ap.add_argument("--workers", type=int, default=1,
                     help="fleet threads for optimize_many (1 = serial)")
     ap.add_argument("--timesteps", type=int, default=8192)
@@ -60,8 +68,25 @@ def main() -> None:
     for name in names:
         get_kernel(name)               # fail fast on unknown names
 
+    backend = make_backend(args.backend)
+    memo_path = None
+    if args.memo_dir:
+        memo = getattr(backend, "memo", None)
+        if memo is None:
+            print(f"[optimize] --memo-dir ignored: backend "
+                  f"{args.backend!r} shares no measurement memo")
+        else:
+            os.makedirs(args.memo_dir, exist_ok=True)
+            memo_path = os.path.join(args.memo_dir, MEMO_FILENAME)
+            if os.path.exists(memo_path):
+                # corrupt / version-mismatched files raise MemoVersionError
+                # here — loudly, before any search work starts
+                n = memo.load(memo_path)
+                print(f"[optimize] warm-started memo from {memo_path}: "
+                      f"{n} entries")
+
     session = OptimizationSession(
-        backend=args.backend,
+        backend=backend,
         strategy=make_budgeted_strategy(args.strategy,
                                         timesteps=args.timesteps,
                                         episode_length=args.episode_length),
@@ -86,6 +111,9 @@ def main() -> None:
               f"cycles ({art.speedup:.3f}x, {tag}, {res.seconds:.1f}s)")
     if session.memo is not None:
         print(f"[optimize] shared memo: {session.memo.summary()}")
+        if memo_path is not None:
+            n = session.memo.save(memo_path)
+            print(f"[optimize] saved memo to {memo_path} ({n} entries)")
 
 
 if __name__ == "__main__":

@@ -67,14 +67,15 @@ def sharded_train_lowerable(cfg: ModelConfig, mesh, *, seq: int,
                             batch: int, num_microbatches: int = None):
     """(fn, args_sds) for the shard_map pipeline train step on ``mesh`` —
     the ``pipe``-axis analogue of the ``train`` branch of :func:`lowerable`
-    (requires ``pipe >= 2`` and no ``model`` axis; see
+    (requires ``pipe >= 2``; a ``model`` axis > 1 composes tensor
+    parallelism into the stage bodies — see
     ``train.step.make_sharded_train_step`` for the constraints)."""
     step_fn = make_sharded_train_step(cfg, _lower_opt(), mesh,
                                       num_microbatches=num_microbatches)
     spec_tree = lm.model_spec(cfg)
     p_sds = jax.eval_shape(functools.partial(lm.init_model, cfg),
                            jax.random.PRNGKey(0))
-    p_specs = shd.sharded_param_specs(spec_tree)
+    p_specs = shd.sharded_param_specs(spec_tree, mesh=mesh)
     p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs)
     p_sds = _with_sharding(p_sds, p_sh)
     opt_sds = jax.eval_shape(_lower_opt().init, p_sds)
@@ -87,7 +88,7 @@ def sharded_train_lowerable(cfg: ModelConfig, mesh, *, seq: int,
     ef_sds = None
     if wants_ef(cfg, mesh):
         pod = shd.axis_sizes(mesh).get("pod", 1)
-        ef_specs = shd.sharded_ef_specs(spec_tree)
+        ef_specs = shd.sharded_ef_specs(spec_tree, mesh=mesh)
         ef_sds = jax.tree.map(
             lambda s, sp: _sds((pod,) + s.shape, jnp.float32, mesh, sp),
             p_sds, ef_specs)

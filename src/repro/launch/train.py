@@ -5,8 +5,10 @@ few-hundred-step driver lives in examples/train_lm.py); on a real cluster
 the same entrypoint takes --full --mesh to pjit over the production mesh.
 
 ``--pipe S`` (or ``pipeline_stages`` on the config) builds a host mesh
-with a ``pipe`` axis and switches the Trainer onto the shard_map gpipe
-step; ``--pods P`` adds a ``pod`` axis whose gradient reduction — when
+with a ``pipe`` axis and switches the Trainer onto the shard_map pipeline
+step (``--pipe-schedule gpipe|1f1b`` picks the micro-op timetable);
+``--model M`` composes a tensor-parallel ``model`` axis into the pipeline
+stages; ``--pods P`` adds a ``pod`` axis whose gradient reduction — when
 the shard_map step is active, i.e. ``--pipe >= 2`` — runs compressed
 (bf16 + error feedback) unless ``--no-compress-pod-grads``.  With
 ``--pods`` alone the jit/GSPMD path still data-parallelizes over ``pod``,
@@ -19,6 +21,7 @@ launch.
 from __future__ import annotations
 
 import argparse
+import warnings
 
 from repro.configs import ARCHS, get_config
 from repro.train import TrainConfig, Trainer
@@ -38,7 +41,14 @@ def main() -> None:
                     help="pipeline stages (0 = cfg.pipeline_stages; > 1 "
                          "builds a `pipe` mesh axis + shard_map step)")
     ap.add_argument("--pipe-microbatches", type=int, default=0,
-                    help="gpipe microbatches (0 = cfg.pipeline_microbatches)")
+                    help="pipeline microbatches "
+                         "(0 = cfg.pipeline_microbatches)")
+    ap.add_argument("--pipe-schedule", default=None,
+                    help="pipeline micro-op schedule: gpipe | 1f1b "
+                         "(default cfg.pipeline_schedule)")
+    ap.add_argument("--model", type=int, default=1,
+                    help="tensor-parallel `model` axis size (> 1 composes "
+                         "TP into the pipeline stages)")
     ap.add_argument("--pods", type=int, default=1,
                     help="pod axis size (> 1 = multi-pod gradient reduction)")
     ap.add_argument("--no-compress-pod-grads", action="store_true",
@@ -54,15 +64,25 @@ def main() -> None:
         overrides["pipeline_stages"] = pipe
     if args.pipe_microbatches:
         overrides["pipeline_microbatches"] = args.pipe_microbatches
+    if args.pipe_schedule:
+        overrides["pipeline_schedule"] = args.pipe_schedule
     if args.no_compress_pod_grads:
         overrides["compress_pod_grads"] = False
     if overrides:
         cfg = cfg.replace(**overrides)
 
+    # validate the schedule name eagerly — a typo should die here with the
+    # valid choices, not deep inside step construction
+    from repro.dist.pipeline import SCHEDULES
+    if cfg.pipeline_schedule not in SCHEDULES:
+        ap.error(f"--pipe-schedule {cfg.pipeline_schedule!r} is not a valid "
+                 f"pipeline schedule; choose from {sorted(SCHEDULES)}")
+
     mesh = None
-    if pipe > 1 or args.pods > 1:
+    if pipe > 1 or args.pods > 1 or args.model > 1:
         from repro.launch.mesh import make_host_mesh
-        mesh = make_host_mesh(pipe=max(pipe, 1), pods=args.pods)
+        mesh = make_host_mesh(model=args.model, pipe=max(pipe, 1),
+                              pods=args.pods)
         note = ""
         if args.pods > 1:
             # the compressed reduction lives in the shard_map pipeline
@@ -77,6 +97,17 @@ def main() -> None:
                              "shard_map step, pass --pipe >= 2")
             note = f" (pod grads: {pod_grads})"
         print(f"[train] mesh: {dict(mesh.shape)}{note}")
+        if pipe > 1:
+            # surface the gcd clamp the Trainer will apply instead of
+            # letting a non-dividing --pipe-microbatches remap silently
+            from repro.train.loop import pipeline_microbatch_clamp
+            n_micro, local_b = pipeline_microbatch_clamp(
+                cfg.pipeline_microbatches, args.global_batch, mesh)
+            if n_micro != cfg.pipeline_microbatches:
+                warnings.warn(
+                    f"--pipe-microbatches {cfg.pipeline_microbatches} does "
+                    f"not divide the per-shard batch {local_b}; the Trainer "
+                    f"will clamp it to {n_micro}", stacklevel=1)
 
     tcfg = TrainConfig(steps=args.steps, seq_len=args.seq_len,
                        global_batch=args.global_batch, lr=args.lr,

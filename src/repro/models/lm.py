@@ -65,9 +65,10 @@ def _mlp_spec(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
             else nn.swiglu_spec(cfg.d_model, d_ff))
 
 
-def _apply_mlp(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
-    return (nn.apply_gelu_mlp(p, x) if cfg.mlp == "gelu"
-            else nn.apply_swiglu(p, x))
+def _apply_mlp(cfg: ModelConfig, p: Dict, x: jax.Array,
+               tp_axis: Optional[str] = None) -> jax.Array:
+    return (nn.apply_gelu_mlp(p, x, tp_axis=tp_axis) if cfg.mlp == "gelu"
+            else nn.apply_swiglu(p, x, tp_axis=tp_axis))
 
 
 # ---------------------------------------------------------------------------
@@ -151,12 +152,21 @@ def window_schedule(cfg: ModelConfig) -> np.ndarray:
 
 def apply_attn(cfg: ModelConfig, p: Dict, x: jax.Array, *,
                window=NO_WINDOW, q_offset: int = 0,
-               causal: bool = True) -> jax.Array:
+               causal: bool = True, tp_axis: Optional[str] = None
+               ) -> jax.Array:
     if cfg.mla:
         return nn.apply_mla(p, x, mla_config(cfg), causal=causal,
                             q_offset=q_offset, chunk=cfg.attn_chunk)
     B, S, _ = x.shape
-    q, k, v = nn.qkv_project(p, x, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    # explicit TP (inside a shard_map over tp_axis): the projection weights
+    # are head shards, so the local head counts come from the *local* shard
+    # shapes; the output projection psums the per-shard partials
+    if tp_axis is None:
+        n_heads, n_kv = cfg.n_heads, cfg.n_kv_heads
+    else:
+        n_heads = p["wq"]["w"].shape[1] // cfg.head_dim
+        n_kv = p["wk"]["w"].shape[1] // cfg.head_dim
+    q, k, v = nn.qkv_project(p, x, n_heads, n_kv, cfg.head_dim)
     if cfg.qk_norm:
         q = nn.apply_rmsnorm(p["q_norm"], q)
         k = nn.apply_rmsnorm(p["k_norm"], k)
@@ -165,21 +175,24 @@ def apply_attn(cfg: ModelConfig, p: Dict, x: jax.Array, *,
     k = nn.apply_rope(k, positions[None, :], cfg.rope_theta)
     o = nn.chunked_attention(q, k, v, causal=causal, window=window,
                              chunk=cfg.attn_chunk, q_offset=q_offset)
-    return nn.out_project(p, o)
+    return nn.out_project(p, o, tp_axis=tp_axis)
 
 
 def dense_block(cfg: ModelConfig, p: Dict, x: jax.Array, *,
-                window=NO_WINDOW, mesh=None) -> jax.Array:
+                window=NO_WINDOW, mesh=None,
+                tp_axis: Optional[str] = None) -> jax.Array:
     x = x + apply_attn(cfg, p["attn"], _apply_norm(cfg, p["ln1"], x),
-                       window=window)
-    x = x + _apply_mlp(cfg, p["mlp"], _apply_norm(cfg, p["ln2"], x))
+                       window=window, tp_axis=tp_axis)
+    x = x + _apply_mlp(cfg, p["mlp"], _apply_norm(cfg, p["ln2"], x),
+                       tp_axis=tp_axis)
     return x
 
 
 def moe_block(cfg: ModelConfig, p: Dict, x: jax.Array, *,
-              window=NO_WINDOW, mesh=None) -> jax.Array:
+              window=NO_WINDOW, mesh=None,
+              tp_axis: Optional[str] = None) -> jax.Array:
     x = x + apply_attn(cfg, p["attn"], _apply_norm(cfg, p["ln1"], x),
-                       window=window)
+                       window=window, tp_axis=tp_axis)
     x = x + nn.apply_moe(p["moe"], _apply_norm(cfg, p["ln2"], x),
                          moe_config(cfg), mesh=mesh)
     return x
@@ -194,7 +207,8 @@ _BLOCK_OF = {"dense": dense_block, "moe": moe_block, "ssm": ssm_block}
 
 
 def stage_forward(cfg: ModelConfig, stacked: Dict, x: jax.Array,
-                  windows: Optional[jnp.ndarray] = None) -> jax.Array:
+                  windows: Optional[jnp.ndarray] = None,
+                  tp_axis: Optional[str] = None) -> jax.Array:
     """Apply a contiguous sub-stack of decoder blocks — one pipeline stage.
 
     ``stacked`` holds this stage's layers with a leading layer dim (any
@@ -202,13 +216,20 @@ def stage_forward(cfg: ModelConfig, stacked: Dict, x: jax.Array,
     :func:`window_schedule` for attention families (may be traced — the
     pipeline step slices it by ``axis_index`` inside shard_map).  Runs with
     ``mesh=None``: the pipeline step owns all collectives explicitly.
+    ``tp_axis`` names the tensor-parallel mesh axis when the stage runs
+    inside a shard_map over a ``pipe × model`` mesh: the attention/MLP
+    weights are then head-/column-shards and the blocks psum their partial
+    projections over it (see ``repro.nn.layers`` / ``repro.nn.attention``).
     """
     block = _BLOCK_OF.get(cfg.family)
     if block is None:
         raise ValueError(f"stage_forward: unsupported family {cfg.family}")
     if cfg.family == "ssm":
         windows = None   # ssm blocks take no attention window
-    return _scan_layers(cfg, block, stacked, x, windows=windows)
+        if tp_axis is not None:
+            raise ValueError("stage_forward: ssm blocks have no TP path")
+    return _scan_layers(cfg, block, stacked, x, windows=windows,
+                        tp_axis=tp_axis)
 
 
 def head_forward(params: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
@@ -248,8 +269,10 @@ def _sp_constraint(cfg: ModelConfig, x: jax.Array, mesh):
 
 def _scan_layers(cfg: ModelConfig, block, stacked: Dict, x: jax.Array,
                  windows: Optional[jnp.ndarray] = None,
-                 mesh=None) -> jax.Array:
+                 mesh=None, tp_axis: Optional[str] = None) -> jax.Array:
     body = functools.partial(block, cfg, mesh=mesh)
+    if tp_axis is not None:   # ssm_block has no tp_axis kwarg; only bind
+        body = functools.partial(body, tp_axis=tp_axis)  # it when in use
 
     def scan_fn(carry, xs):
         carry = _sp_constraint(cfg, carry, mesh)

@@ -50,10 +50,17 @@ def qkv_project(p: Dict, x: jax.Array, n_heads: int, n_kv: int,
     return q, k, v
 
 
-def out_project(p: Dict, o: jax.Array) -> jax.Array:
+def out_project(p: Dict, o: jax.Array,
+                tp_axis: Optional[str] = None) -> jax.Array:
+    """``tp_axis`` (explicit tensor parallelism inside a ``shard_map``):
+    ``o`` holds this rank's head shard, ``wo`` the matching row shard, and
+    the partial output projection is assembled by a ``psum``."""
     from repro.nn.core import apply_dense
     B, S, H, D = o.shape
-    return apply_dense(p["wo"], o.reshape(B, S, H * D))
+    y = apply_dense(p["wo"], o.reshape(B, S, H * D))
+    if tp_axis is not None:
+        y = jax.lax.psum(y, tp_axis)
+    return y
 
 
 def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

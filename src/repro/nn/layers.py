@@ -2,7 +2,7 @@
 
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,10 +51,22 @@ def swiglu_spec(d_model: int, d_ff: int) -> Dict:
     }
 
 
-def apply_swiglu(p: Dict, x: jax.Array) -> jax.Array:
+def apply_swiglu(p: Dict, x: jax.Array,
+                 tp_axis: Optional[str] = None) -> jax.Array:
+    """``tp_axis`` enables explicit tensor parallelism for callers inside a
+    ``shard_map`` over that axis: gate/up hold a ``d_ff / TP`` column shard
+    (partial hidden works elementwise), down holds the matching row shard,
+    and the down matmul's partial sum is assembled by a ``psum`` — the
+    Megatron column→row pattern with the collective written out.  Under
+    ``jax.grad`` the psum transposes back to a psum (shard_map with
+    replication checking off), which routes each rank's partial input
+    cotangent exactly like Megatron's conjugate ``f`` operator."""
     g = apply_dense(p["gate"], x)
     u = apply_dense(p["up"], x)
-    return apply_dense(p["down"], jax.nn.silu(g) * u)
+    h = jax.nn.silu(g) * u
+    if tp_axis is None:
+        return apply_dense(p["down"], h)
+    return jax.lax.psum(h @ p["down"]["w"].astype(h.dtype), tp_axis)
 
 
 def gelu_mlp_spec(d_model: int, d_ff: int, bias: bool = True) -> Dict:
@@ -64,8 +76,17 @@ def gelu_mlp_spec(d_model: int, d_ff: int, bias: bool = True) -> Dict:
     }
 
 
-def apply_gelu_mlp(p: Dict, x: jax.Array) -> jax.Array:
-    return apply_dense(p["down"], jax.nn.gelu(apply_dense(p["up"], x)))
+def apply_gelu_mlp(p: Dict, x: jax.Array,
+                   tp_axis: Optional[str] = None) -> jax.Array:
+    h = jax.nn.gelu(apply_dense(p["up"], x))
+    if tp_axis is None:
+        return apply_dense(p["down"], h)
+    # the down bias is replicated over the TP axis: add it once, after the
+    # partial-sum psum (folding it into apply_dense would count it TP times)
+    y = jax.lax.psum(h @ p["down"]["w"].astype(h.dtype), tp_axis)
+    if "w_b" in p["down"]:
+        y = y + p["down"]["w_b"].astype(y.dtype)
+    return y
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,8 @@ Backends:
 
 from __future__ import annotations
 
+import os
+import pickle
 import threading
 from typing import Callable, Dict, Optional, Protocol, Sequence, runtime_checkable
 
@@ -40,6 +42,21 @@ import numpy as np
 from repro.core.isa import Instruction
 from repro.core.machine import Machine
 from repro.core.timing import time_program, time_record
+
+# disk format for persisted memos (SharedMeasureMemo.save/load).  Bump the
+# version on layout changes; unknown versions and corrupt files fail
+# loudly (MemoVersionError) — a half-read memo warm-start would silently
+# waste a re-optimization campaign, exactly the failure mode schedule
+# cache v2 rules out.
+MEMO_FORMAT = "repro-measure-memo"
+MEMO_VERSION = 1
+_KNOWN_MEMO_VERSIONS = (1,)
+
+
+class MemoVersionError(RuntimeError):
+    """A persisted measurement memo is corrupt or from an unknown format
+    version.  Deliberately loud (like ``sched.cache.CacheVersionError``):
+    callers wanting best-effort warm-starts catch exactly this."""
 
 
 # ---------------------------------------------------------------------------
@@ -153,6 +170,69 @@ class SharedMeasureMemo:
 
     def __len__(self) -> int:
         return len(self._data)
+
+    # -- persistence (fleet warm-starts across campaigns) -------------------
+
+    def save(self, path: str) -> int:
+        """Persist every entry to ``path`` (atomic: tmp file + rename).
+
+        The on-disk layout stores the *timing-record sequences* themselves
+        — not the process-local interned fingerprint ids, which a fresh
+        process would assign differently.  Returns the entry count."""
+        by_fp: Dict[int, list] = {}
+        for (fp, key), (cycles, writer) in self._data.items():
+            by_fp.setdefault(fp, []).append((key, cycles, writer))
+        recs_of = {fp: recs for recs, fp in self._fp_ids.items()}
+        payload = {
+            "format": MEMO_FORMAT,
+            "version": MEMO_VERSION,
+            "programs": [
+                {"records": recs_of[fp], "entries": entries}
+                for fp, entries in sorted(by_fp.items()) if fp in recs_of
+            ],
+        }
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "wb") as f:
+            pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+        os.replace(tmp, path)
+        return len(self._data)
+
+    def load(self, path: str) -> int:
+        """Merge the memo persisted at ``path`` into this one (existing
+        entries win — values are bit-exact anyway, and first-writer-wins is
+        the in-memory rule too).  Returns the number of entries merged.
+        Raises :class:`MemoVersionError` on corrupt or unknown-version
+        files."""
+        try:
+            with open(path, "rb") as f:
+                payload = pickle.load(f)
+        except (OSError, pickle.UnpicklingError, EOFError, AttributeError,
+                ImportError, IndexError) as e:
+            raise MemoVersionError(
+                f"corrupt measurement memo {path}: {e}") from e
+        if not isinstance(payload, dict) \
+                or payload.get("format") != MEMO_FORMAT:
+            raise MemoVersionError(
+                f"{path} is not a {MEMO_FORMAT} file")
+        if payload.get("version") not in _KNOWN_MEMO_VERSIONS:
+            raise MemoVersionError(
+                f"measurement memo {path} has version "
+                f"{payload.get('version')!r}; this build reads "
+                f"{_KNOWN_MEMO_VERSIONS}")
+        merged = 0
+        for prog in payload["programs"]:
+            recs = tuple(prog["records"])
+            with self._lock:
+                fp = self._fp_ids.get(recs)
+                if fp is None:
+                    fp = len(self._fp_ids)
+                    self._fp_ids[recs] = fp
+            for key, cycles, writer in prog["entries"]:
+                k = (fp, key)
+                if k not in self._data:
+                    self._data[k] = (cycles, writer)
+                    merged += 1
+        return merged
 
 
 # ---------------------------------------------------------------------------

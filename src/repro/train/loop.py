@@ -37,6 +37,15 @@ class InjectedFailure(RuntimeError):
     pass
 
 
+def pipeline_microbatch_clamp(n_micro: int, global_batch: int, mesh):
+    """``(clamped, per_shard_batch)``: the pipeline microbatch count the
+    Trainer will actually stream — the requested count gcd-clamped to
+    divide the per-shard batch.  One definition, shared by the Trainer
+    (which applies it) and ``launch.train`` (which warns about it)."""
+    local_b = max(1, global_batch // max(1, shd.dp_size(mesh)))
+    return math.gcd(n_micro, local_b) or 1, local_b
+
+
 @dataclasses.dataclass
 class TrainConfig:
     steps: int = 100
@@ -80,8 +89,12 @@ class Trainer:
         self.use_pipeline = mesh is not None and shd.pipe_size(mesh) > 1
         if self.use_pipeline and wants_ef(cfg, mesh):
             # error-feedback residuals ride in the train state so they are
-            # checkpointed (a restart must not reset accumulated residuals)
-            state = state._replace(ef=init_ef_state(params, mesh))
+            # checkpointed (a restart must not reset accumulated residuals);
+            # the spec tree lets them mirror TP weight shards on
+            # `model > 1` meshes
+            state = state._replace(
+                ef=init_ef_state(params, mesh,
+                                 spec_tree=model.model_spec(cfg)))
 
         self.start_step = 0
         if tcfg.ckpt_dir and checkpoint.latest_step(tcfg.ckpt_dir) is not None:
@@ -118,12 +131,12 @@ class Trainer:
                 print(f"[train] pipeline step ignores num_microbatches="
                       f"{tcfg.num_microbatches} (no gradient accumulation; "
                       f"gpipe streams cfg.pipeline_microbatches instead)")
-            # clamp the gpipe microbatch count to divide the per-shard
+            # clamp the pipeline microbatch count to divide the per-shard
             # batch (strictness stays in make_sharded_train_step for
             # direct callers; the Trainer knows the global batch and can
             # pick the nearest workable M)
-            local_b = max(1, tcfg.global_batch // max(1, shd.dp_size(mesh)))
-            n_micro = math.gcd(cfg.pipeline_microbatches, local_b) or 1
+            n_micro, local_b = pipeline_microbatch_clamp(
+                cfg.pipeline_microbatches, tcfg.global_batch, mesh)
             if n_micro != cfg.pipeline_microbatches:
                 print(f"[train] pipeline microbatches clamped "
                       f"{cfg.pipeline_microbatches} -> {n_micro} "

@@ -17,10 +17,10 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.dist import compress
 from repro.dist import sharding as shd
-from repro.dist.pipeline import gpipe_local
+from repro.dist.pipeline import get_schedule
 from repro.models import encdec, lm
 from repro.optim.adamw import AdamState, Optimizer, apply_updates
-from repro.utils.tree import global_norm, sum_squares
+from repro.utils.tree import global_norm
 
 
 class TrainState(NamedTuple):
@@ -139,15 +139,20 @@ def wants_ef(cfg: ModelConfig, mesh) -> bool:
             and shd.axis_sizes(mesh).get("pod", 1) > 1)
 
 
-def init_ef_state(params, mesh):
+def init_ef_state(params, mesh, spec_tree=None):
     """Zero error-feedback residuals for :func:`make_sharded_train_step`:
     one f32 block per ``pod`` rank, stacked on a leading dim.  Each leaf is
     created directly under its shard_map sharding (P("pod") / stage leaves
     P("pod", "pipe")) — materializing (pod, *param_shape) zeros replicated
     on the default device would double the fp32 parameter footprint per
-    pod before the step ever runs."""
+    pod before the step ever runs.
+
+    ``spec_tree`` (the model's ParamSpec tree) is required when ``mesh``
+    carries a ``model`` axis > 1: the residuals then mirror the
+    tensor-parallel weight shards, which takes the logical axes."""
     pod = shd.axis_sizes(mesh).get("pod", 1)
-    ef_specs = shd.sharded_ef_specs(params)
+    ef_specs = shd.sharded_ef_specs(
+        spec_tree if spec_tree is not None else params, mesh=mesh)
 
     def make(p, spec):
         sharding = jax.sharding.NamedSharding(mesh, spec)
@@ -160,24 +165,38 @@ def init_ef_state(params, mesh):
 
 def make_sharded_train_step(cfg: ModelConfig, opt: Optimizer, mesh, *,
                             num_microbatches: Optional[int] = None,
-                            compress_pod: Optional[bool] = None):
+                            compress_pod: Optional[bool] = None,
+                            schedule=None,
+                            overlap_pod_reduce: Optional[bool] = None):
     """Explicit-collective train step built on ``jax.shard_map``.
 
     Per device, the step: embeds the local batch shard, stages the decoder
-    blocks through :func:`repro.dist.pipeline.gpipe_local` microbatches
-    over the ``pipe`` axis (each rank owns ``n_layers / pipe`` contiguous
-    layers — stage weights never replicate), differentiates the pipeline
-    in place (the ring ppermute transposes to the backward ring), then
-    reduces gradients: glue params (embed / final norm / head) psum over
-    ``pipe``, everything pmean over ``data``, and over the slow ``pod``
-    axis either :func:`repro.dist.compress.compressed_psum` (bf16 wire
-    format + error feedback, ``compress_pod``) or a plain fp32 pmean.
+    blocks through a :class:`repro.dist.pipeline.PipelineSchedule`
+    (``schedule`` / ``cfg.pipeline_schedule``: ``"gpipe"`` or ``"1f1b"``)
+    microbatched over the ``pipe`` axis (each rank owns ``n_layers / pipe``
+    contiguous layers — stage weights never replicate), differentiates the
+    pipeline in place (the ring ppermute transposes to the backward ring),
+    then reduces gradients: glue params (embed / final norm / head) psum
+    over ``pipe``, everything pmean over ``data``, and over the slow
+    ``pod`` axis either :func:`repro.dist.compress.compressed_psum` (bf16
+    wire format + error feedback, ``compress_pod``) or a plain fp32 pmean.
+    With ``overlap_pod_reduce`` (default ``cfg.overlap_pod_reduce``) the
+    compressed reduction is issued per gradient group — stage grads first,
+    as they finalize during the backward drain — and joined only at the
+    optimizer update, so the scheduler can overlap the slow pod wire time
+    with the remaining backward work and the next step's fill phase.
 
-    Constraints (checked eagerly): ``pipe >= 2`` on the mesh; ``model``
-    axis absent or size 1 (the pipeline step does not compose with tensor
-    parallelism — use :func:`make_train_step` for TP meshes); family in
-    dense/moe/ssm with a uniform layer stack divisible by ``pipe``;
-    ``opt`` from :mod:`repro.optim.adamw` (AdamState-shaped state).
+    A ``model`` mesh axis > 1 composes tensor parallelism into the stage
+    bodies: attention/MLP weights shard per head/column over ``model``
+    (:func:`repro.dist.sharding.sharded_param_specs`), the blocks psum
+    their partial projections in-stage (``repro.nn`` ``tp_axis`` paths),
+    and glue stays replicated.  Supported for the dense family with
+    ``d_ff`` / ``n_heads`` / ``n_kv_heads`` divisible by the axis size.
+
+    Remaining constraints (checked eagerly): ``pipe >= 2`` on the mesh;
+    family in dense/moe/ssm with a uniform layer stack divisible by
+    ``pipe``; ``opt`` from :mod:`repro.optim.adamw` (AdamState-shaped
+    state).
 
     Returns ``train_step(state, batch) -> (state, metrics)`` with the same
     contract as :func:`make_train_step`; ``state.ef`` must be
@@ -185,12 +204,10 @@ def make_sharded_train_step(cfg: ModelConfig, opt: Optimizer, mesh, *,
     """
     sizes = shd.axis_sizes(mesh)
     n_stages = sizes.get("pipe", 1)
+    tp = sizes.get("model", 1)
     if n_stages < 2:
         raise PipelineStepError("make_sharded_train_step needs a mesh 'pipe' axis "
                          f"of size >= 2, got {sizes}")
-    if sizes.get("model", 1) != 1:
-        raise PipelineStepError("the pipeline step does not compose with tensor "
-                         "parallelism (model axis > 1); use make_train_step")
     if cfg.family not in ("dense", "moe", "ssm"):
         raise PipelineStepError(f"pipeline step: unsupported family {cfg.family}")
     if cfg.family == "moe" and cfg.first_dense_layers:
@@ -199,11 +216,37 @@ def make_sharded_train_step(cfg: ModelConfig, opt: Optimizer, mesh, *,
     if cfg.n_layers % n_stages:
         raise PipelineStepError(f"n_layers={cfg.n_layers} not divisible by "
                          f"pipe={n_stages}")
+    if tp > 1:
+        if cfg.family != "dense":
+            raise PipelineStepError(
+                "tensor-parallel stage composition (model axis > 1) "
+                f"supports the dense family only, got {cfg.family}")
+        if cfg.mla:
+            raise PipelineStepError("pipeline step: MLA attention has no "
+                                    "explicit-TP path")
+        if cfg.qk_norm:
+            raise PipelineStepError(
+                "pipeline step: qk_norm scales live inside the TP region "
+                "and would need a model-axis grad reduction")
+        for val, nm in ((cfg.d_ff, "d_ff"), (cfg.n_heads, "n_heads"),
+                       (cfg.n_kv_heads, "n_kv_heads")):
+            if val % tp:
+                raise PipelineStepError(
+                    f"{nm}={val} not divisible by model={tp} (head-/column-"
+                    "granular TP sharding)")
+    try:
+        sched = get_schedule(schedule if schedule is not None
+                             else cfg.pipeline_schedule)
+    except ValueError as e:
+        raise PipelineStepError(str(e)) from None
+    tp_axis = "model" if tp > 1 else None
     n_micro = num_microbatches or cfg.pipeline_microbatches
     has_pod = sizes.get("pod", 1) > 1
     if compress_pod is None:
         compress_pod = cfg.compress_pod_grads
     compress_pod = bool(compress_pod and has_pod)
+    if overlap_pod_reduce is None:
+        overlap_pod_reduce = cfg.overlap_pod_reduce
     dp_total = sizes.get("pod", 1) * sizes.get("data", 1)
     stage_keys = tuple(k for k in shd.STAGE_KEYS)
     layers_per_stage = cfg.n_layers // n_stages
@@ -223,30 +266,78 @@ def make_sharded_train_step(cfg: ModelConfig, opt: Optimizer, mesh, *,
             wloc = None
 
         def stage_fn(w, h):
-            return lm.stage_forward(cfg, w, h, windows=wloc)
+            return lm.stage_forward(cfg, w, h, windows=wloc,
+                                    tp_axis=tp_axis)
 
-        y = gpipe_local(stage_fn, params["layers"], micro,
-                        n_stages=n_stages, axis="pipe", replicate_out=False)
+        y = sched.run_local(stage_fn, params["layers"], micro,
+                            n_stages=n_stages, axis="pipe",
+                            replicate_out=False)
         y = y.reshape((tokens.shape[0],) + y.shape[2:])
         logits = lm.head_forward(params, y, cfg)
         nll = cross_entropy(logits, batch["labels"])
         # only the last pipe rank holds real pipeline outputs; masking the
         # loss there makes the summed-over-ranks scalar equal ONE copy of
-        # the shard loss, so backward collectives don't over-count it
-        is_last = jax.lax.axis_index("pipe") == n_stages - 1
-        return jnp.where(is_last, nll, 0.0)
+        # the shard loss, so backward collectives don't over-count it.
+        # Under TP every model rank replicates the final stream, so the
+        # loss is additionally owned by model rank 0 alone — same trick,
+        # second axis.
+        owns = jax.lax.axis_index("pipe") == n_stages - 1
+        if tp > 1:
+            owns = owns & (jax.lax.axis_index("model") == 0)
+        return jnp.where(owns, nll, 0.0)
+
+    # --- in/out specs + per-leaf reduction plan ----------------------------
+    p_specs = shd.sharded_param_specs(lm.model_spec(cfg), stage_keys, mesh)
+    opt_specs = AdamState(step=P(), mu=p_specs, nu=p_specs)
+    ef_specs = (shd.sharded_ef_specs(lm.model_spec(cfg), stage_keys, mesh)
+                if compress_pod else None)
+
+    # per-leaf reduction plans, read straight off the specs.  Gradients are
+    # *partial* over every pipeline/TP axis the leaf is NOT sharded on
+    # (the masked loss is owned by one (pipe, model) rank; each rank's
+    # backward carries only its own compute's contribution), so assembly
+    # psums over {pipe, model} minus the leaf's sharded axes — for the
+    # model=1 mesh this degenerates to the classic glue-psum-over-pipe.
+    # The global grad norm is the mirror image: leaves sharded over
+    # pipe/model psum their squared sums over exactly those axes.
+    def _spec_axes(sp) -> tuple:
+        ents = []
+        for e in tuple(sp):
+            ents.extend(e if isinstance(e, (tuple, list)) else (e,))
+        return tuple(a for a in ("pipe", "model") if a in ents)
+
+    def is_spec(x):
+        return isinstance(x, P)
+
+    partial_axes = ("pipe", "model") if tp > 1 else ("pipe",)
+    flat_specs = [_spec_axes(sp)
+                  for sp in jax.tree.leaves(p_specs, is_leaf=is_spec)]
+    flat_norm_axes = flat_specs
+    flat_psum_axes = [tuple(a for a in partial_axes if a not in sharded)
+                      for sharded in flat_specs]
+
+    def assemble_grads(grads):
+        flat, tdef = jax.tree.flatten(grads)
+        flat = [jax.lax.psum(g, ax) if ax else g
+                for g, ax in zip(flat, flat_psum_axes)]
+        return jax.tree.unflatten(tdef, flat)
+
+    def global_sq(grads):
+        groups: Dict[tuple, list] = {}
+        for g, ax in zip(jax.tree.leaves(grads), flat_norm_axes):
+            groups.setdefault(ax, []).append(
+                jnp.sum(jnp.square(g.astype(jnp.float32))))
+        total = jnp.zeros(())
+        for ax, parts in groups.items():
+            part = jnp.sum(jnp.stack(parts))
+            total = total + (jax.lax.psum(part, ax) if ax else part)
+        return total
 
     def device_step(state: TrainState, batch: Dict):
         params = state.params
         loss_part, grads = jax.value_and_grad(local_loss)(params, batch)
-        # glue gradients are partial per pipe rank (embed input path lands
-        # on stage 0, head path on the last stage, tied embeddings on
-        # both): psum assembles them.  Stage gradients stay local — each
-        # rank owns its layer block.
-        grads = {k: (v if k in stage_keys else
-                     jax.tree.map(lambda g: jax.lax.psum(g, "pipe"), v))
-                 for k, v in grads.items()}
-        loss = jax.lax.psum(loss_part, "pipe")
+        grads = assemble_grads(grads)
+        loss = jax.lax.psum(loss_part, partial_axes)
         if "data" in sizes:
             grads = jax.tree.map(lambda g: jax.lax.pmean(g, "data"), grads)
             loss = jax.lax.pmean(loss, "data")
@@ -255,17 +346,24 @@ def make_sharded_train_step(cfg: ModelConfig, opt: Optimizer, mesh, *,
             loss = jax.lax.pmean(loss, "pod")
             if compress_pod:
                 err = jax.tree.map(lambda e: e[0], ef)
-                grads, new_err = compress.compressed_psum(grads, err, "pod")
+                if overlap_pod_reduce:
+                    # issue per-group reductions, stage grads first: their
+                    # buckets finalize during the backward drain and can
+                    # fly while glue backward / metrics still compute —
+                    # joined only at the optimizer update below
+                    order = ([k for k in grads if k in stage_keys]
+                             + [k for k in grads if k not in stage_keys])
+                    grads, new_err = compress.compressed_psum_grouped(
+                        grads, err, "pod", order)
+                else:
+                    grads, new_err = compress.compressed_psum(grads, err,
+                                                              "pod")
                 ef = jax.tree.map(lambda e: e[None], new_err)
             else:
                 grads = jax.tree.map(lambda g: jax.lax.pmean(g, "pod"),
                                      grads)
-        # true global grad norm: stage shards live on distinct pipe ranks
-        stage_sq = sum_squares({k: grads[k] for k in stage_keys
-                                if k in grads})
-        glue_sq = sum_squares({k: v for k, v in grads.items()
-                               if k not in stage_keys})
-        gnorm = jnp.sqrt(glue_sq + jax.lax.psum(stage_sq, "pipe"))
+        # true global grad norm from the per-leaf reduction plan
+        gnorm = jnp.sqrt(global_sq(grads))
         if opt.max_grad_norm is not None:
             # clip against the GLOBAL norm here; after this scaling every
             # per-rank norm opt.update can see is <= max_grad_norm, so its
@@ -277,12 +375,6 @@ def make_sharded_train_step(cfg: ModelConfig, opt: Optimizer, mesh, *,
         metrics = {"loss": loss, "grad_norm": gnorm,
                    "step": state.step + 1}
         return TrainState(params, opt_state, state.step + 1, ef), metrics
-
-    # --- in/out specs ------------------------------------------------------
-    p_specs = shd.sharded_param_specs(lm.model_spec(cfg), stage_keys)
-    opt_specs = AdamState(step=P(), mu=p_specs, nu=p_specs)
-    ef_specs = (shd.sharded_ef_specs(lm.model_spec(cfg), stage_keys)
-                if compress_pod else None)
     state_specs = TrainState(params=p_specs, opt_state=opt_specs,
                              step=P(), ef=ef_specs)
     metric_specs = {"loss": P(), "grad_norm": P(), "step": P()}

@@ -3,6 +3,7 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main test process
 keeps the host's real (single-device) view."""
 
 import jax
+import pytest
 
 from repro.dist import sharding as shd
 
@@ -171,9 +172,12 @@ def test_host_mesh_pipe_composes(subproc):
 
 
 # The shard_map pipeline step must match the plain (single-device) jit step
-# numerically: same init, same batches, f32 reduced config -> the loss
-# trajectories agree to float tolerance (the pipeline only reorders the
-# same math into microbatch stages).
+# numerically for every schedule x TP combination: same init, same batches,
+# reduced config -> the loss trajectories agree to float tolerance (the
+# pipeline only reorders the same math into microbatch stages; TP only
+# splits the same matmuls into psum-joined shards).  The two schedules run
+# every microbatch through identical per-stage math, so their metrics must
+# agree EXACTLY.
 _PIPELINE_STEP_CODE = """
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_config
@@ -181,34 +185,79 @@ from repro.data.pipeline import make_data
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.optim import adamw as adamw_fn, constant_schedule
-from repro.train.step import TrainState, make_train_step, \
+from repro.train.step import TrainState, make_train_step, \\
     make_sharded_train_step
+model = MODEL_N
 cfg = get_config("stablelm-3b", reduced=True).replace(
     n_layers=4, pipeline_microbatches=4)
-mesh = make_host_mesh(pipe=4)          # (pipe=4, data=2, model=1)
+pipe = 4 // model
+mesh = make_host_mesh(pipe=pipe, model=model)   # 8 devices -> data=2 left
 params = lm.init_model(cfg, jax.random.PRNGKey(0))
 opt = adamw_fn(constant_schedule(1e-3), weight_decay=0.1, max_grad_norm=1.0)
 def fresh():
     return TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
 plain = jax.jit(make_train_step(cfg, opt))
-piped = jax.jit(make_sharded_train_step(cfg, opt, mesh))
-sp, ss = fresh(), fresh()
+gpipe = jax.jit(make_sharded_train_step(cfg, opt, mesh, schedule="gpipe"))
+ofob = jax.jit(make_sharded_train_step(cfg, opt, mesh, schedule="1f1b"))
+sp, sg, so = fresh(), fresh(), fresh()
 data = make_data(cfg, 16, 8)
 for i in range(4):
     sp, mp = plain(sp, data.batch_at(i))
-    ss, ms = piped(ss, data.batch_at(i))
-    lp, ls = float(mp["loss"]), float(ms["loss"])
-    assert np.isfinite(ls)
-    assert abs(lp - ls) / abs(lp) < 1e-4, (i, lp, ls)
-assert abs(float(mp["grad_norm"]) - float(ms["grad_norm"])) \
+    sg, mg = gpipe(sg, data.batch_at(i))
+    so, mo = ofob(so, data.batch_at(i))
+    lp, lg, lo = float(mp["loss"]), float(mg["loss"]), float(mo["loss"])
+    assert np.isfinite(lg)
+    assert abs(lp - lg) / abs(lp) < 1e-4, (i, lp, lg)
+    # 1F1B reorders micro-ops, not math: exact agreement with gpipe
+    assert lo == lg, (i, lo, lg)
+    assert float(mo["grad_norm"]) == float(mg["grad_norm"])
+assert abs(float(mp["grad_norm"]) - float(mg["grad_norm"])) \\
     / float(mp["grad_norm"]) < 1e-3
-print("PIPELINE-STEP-OK", ls)
+print("PIPELINE-STEP-OK", lg)
 """
 
 
-def test_sharded_pipeline_step_matches_plain(subproc):
-    out = subproc(_PIPELINE_STEP_CODE, n_devices=8)
+@pytest.mark.parametrize("model", [1, 2])
+def test_sharded_pipeline_step_matches_plain(subproc, model):
+    out = subproc(_PIPELINE_STEP_CODE.replace("MODEL_N", str(model)),
+                  n_devices=8)
     assert "PIPELINE-STEP-OK" in out
+
+
+def test_schedule_tables_cover_all_ops_once():
+    from repro.dist.pipeline import SCHEDULES
+    for name, cls in SCHEDULES.items():
+        for S, M in ((2, 4), (4, 8), (4, 2), (3, 5)):
+            table = cls().table(M, S)
+            fwd = {(o.stage, o.micro) for o in table if o.phase == "F"}
+            bwd = {(o.stage, o.micro) for o in table if o.phase == "B"}
+            want = {(s, m) for s in range(S) for m in range(M)}
+            assert fwd == bwd == want, (name, S, M)
+            assert len(table) == 2 * S * M, (name, S, M)
+
+
+def test_1f1b_bounds_peak_live_activations():
+    """The point of the schedule: for n_micro > n_stages, 1F1B holds at
+    most min(S, M) microbatch activations live per stage where gpipe holds
+    all M."""
+    from repro.dist.pipeline import GPipeSchedule, OneFOneBSchedule
+    g, o = GPipeSchedule(), OneFOneBSchedule()
+    for S, M in ((2, 8), (4, 8), (3, 12)):
+        assert g.peak_live_microbatches(M, S) == M
+        assert o.peak_live_microbatches(M, S) == min(S, M)
+        assert o.peak_live_microbatches(M, S) < g.peak_live_microbatches(M, S)
+        # same bubble: 1F1B trades memory, not throughput
+        assert abs(g.bubble_fraction(M, S) - o.bubble_fraction(M, S)) < 1e-9
+    # M <= S: both schedules bottom out at M in-flight
+    assert o.peak_live_microbatches(2, 4) == 2
+
+
+def test_get_schedule_rejects_unknown_names():
+    from repro.dist.pipeline import get_schedule
+    with pytest.raises(ValueError, match="1f1b"):
+        get_schedule("pipedream-2bw")
+    assert get_schedule("1f1b").name == "1f1b"
+    assert get_schedule(get_schedule("gpipe")).name == "gpipe"
 
 
 # Multi-pod: gradients must actually route through compressed_psum (the
@@ -240,10 +289,18 @@ sf = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
 step_c = jax.jit(make_sharded_train_step(cfg, opt, mesh))
 step_f = jax.jit(make_sharded_train_step(cfg, opt, mesh,
                                          compress_pod=False))
+# the overlapped (per-group, stage-first) reduction is a pure reordering
+# of the same elementwise quantize+psum: bit-identical trajectory
+so = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32),
+                init_ef_state(params, mesh))
+step_o = jax.jit(make_sharded_train_step(cfg, opt, mesh,
+                                         overlap_pod_reduce=False))
 data = make_data(cfg, 16, 8)
 for i in range(5):
     sc, mc = step_c(sc, data.batch_at(i))
     sf, mf = step_f(sf, data.batch_at(i))
+    so, mo = step_o(so, data.batch_at(i))
+    assert float(mo["loss"]) == float(mc["loss"]), (i, "overlap changed math")
 assert calls, "compressed_psum was never invoked"
 ef_l1 = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(sc.ef))
 assert ef_l1 > 0, "error-feedback residual stayed zero: no quantization"

@@ -370,3 +370,60 @@ def test_incremental_mask_matches_reference(kernel, hops, stall_db,
             if done:
                 break
     assert fast.best_cycles == ref.best_cycles
+
+
+# ---------------------------------------------------------------------------
+# disk-backed SharedMeasureMemo (fleet warm-starts across campaigns)
+# ---------------------------------------------------------------------------
+
+def test_memo_save_load_roundtrip_warm_starts(tmp_path, stall_db):
+    from repro.sched.backends import SharedMeasureMemo
+    backend = FastTimingBackend()
+    session = OptimizationSession(backend=backend, strategy="greedy",
+                                  cache_dir=str(tmp_path / "c"),
+                                  stall_db=stall_db)
+    session.optimize(OptimizeRequest(kernel="rmsnorm"))
+    memo = backend.memo
+    assert len(memo) > 0
+    path = str(tmp_path / "memo.pkl")
+    assert memo.save(path) == len(memo)
+
+    fresh = SharedMeasureMemo()
+    assert fresh.load(path) == len(memo)
+    assert len(fresh) == len(memo)
+    # same entries, bit-exact values, under re-interned fingerprints
+    assert sorted(c for c, _ in fresh._data.values()) == \
+        sorted(c for c, _ in memo._data.values())
+
+    # a campaign warm-started from the persisted memo re-times nothing it
+    # already measured: the baseline read is a pure hit
+    warm = FastTimingBackend(memo=fresh)
+    session2 = OptimizationSession(backend=warm, strategy="greedy",
+                                   cache_dir=str(tmp_path / "c2"),
+                                   stall_db=stall_db)
+    session2.optimize(OptimizeRequest(kernel="rmsnorm"))
+    assert fresh.stats()["hits"] > 0
+    # loading twice merges idempotently
+    assert fresh.load(path) == 0
+
+
+def test_memo_corrupt_and_unknown_versions_fail_loudly(tmp_path):
+    import pickle
+    from repro.sched.backends import MemoVersionError, SharedMeasureMemo
+    memo = SharedMeasureMemo()
+    bad = tmp_path / "bad.pkl"
+    bad.write_bytes(b"not a pickle at all")
+    with pytest.raises(MemoVersionError, match="corrupt"):
+        memo.load(str(bad))
+    wrong = tmp_path / "wrong.pkl"
+    with open(wrong, "wb") as f:
+        pickle.dump({"format": "something-else"}, f)
+    with pytest.raises(MemoVersionError, match="not a"):
+        memo.load(str(wrong))
+    future = tmp_path / "future.pkl"
+    with open(future, "wb") as f:
+        pickle.dump({"format": "repro-measure-memo", "version": 99,
+                     "programs": []}, f)
+    with pytest.raises(MemoVersionError, match="version"):
+        memo.load(str(future))
+    assert len(memo) == 0

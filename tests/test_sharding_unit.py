@@ -182,10 +182,24 @@ def test_make_sharded_train_step_validates_eagerly():
     # no pipe axis
     with pytest.raises(ValueError, match="pipe"):
         make_sharded_train_step(cfg, opt, _mesh((2, 4), ("data", "model")))
-    # tensor parallelism does not compose with the pipeline step
-    with pytest.raises(ValueError, match="tensor"):
+    # tensor parallelism composes for dense configs with divisible dims...
+    assert make_sharded_train_step(
+        cfg, opt, _mesh((2, 2, 2), ("pipe", "data", "model"))) is not None
+    # ...but TP dims that do not divide the model axis are rejected
+    with pytest.raises(ValueError, match="divisible by model"):
         make_sharded_train_step(
-            cfg, opt, _mesh((2, 2, 2), ("pipe", "data", "model")))
+            cfg.replace(d_ff=cfg.d_ff + 1), opt,
+            _mesh((2, 2, 2), ("pipe", "data", "model")))
+    # and non-dense families have no explicit-TP stage path
+    with pytest.raises(ValueError, match="dense family"):
+        make_sharded_train_step(
+            get_config("mamba2-1.3b", reduced=True), opt,
+            _mesh((2, 2, 2), ("pipe", "data", "model")))
+    # unknown schedule names fail eagerly with the valid choices
+    with pytest.raises(ValueError, match="gpipe"):
+        make_sharded_train_step(
+            cfg, opt, _mesh((2, 2, 1), ("pipe", "data", "model")),
+            schedule="interleaved")
     # layer stack must split evenly across stages (reduced has 2 layers)
     with pytest.raises(ValueError, match="divisible"):
         make_sharded_train_step(

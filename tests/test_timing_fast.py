@@ -200,3 +200,28 @@ def test_train_fast_path_reproduces_oracle_result(stall_db, kernel_programs):
     assert last["measure_calls"] == last["memo_hits"] + last["memo_misses"]
     assert last["memo_hits"] > 0
     assert slow.stats[-1]["memo_hits"] == 0  # oracle path: no memo
+
+
+def test_time_many_batches_suffix_retiming(stall_db, kernel_programs):
+    """One ScheduleTimer pass over a batch of near-permutations must return
+    exactly what timing each order on its own fresh timer returns — and the
+    lexicographic grouping must actually resume from shared prefixes."""
+    prog = kernel_programs["bmm"]
+    env = AssemblyGame(prog, stall_db=stall_db, episode_length=64)
+    rng = np.random.default_rng(7)
+    orders = []
+    env.reset()
+    for _ in range(12):
+        acts = env.valid_actions()
+        if not acts:
+            env.reset()
+            continue
+        env.step(int(rng.choice(acts)))
+        orders.append(env.id_at.copy())
+    batch = ScheduleTimer(env.original)
+    got = batch.time_many(orders)
+    for order, cycles in zip(orders, got):
+        assert cycles == ScheduleTimer(env.original).time_ids(order)
+    # de-duplicated batches come back in input order
+    got2 = batch.time_many(list(reversed(orders)))
+    assert got2 == list(reversed(got))

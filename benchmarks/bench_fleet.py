@@ -1,0 +1,81 @@
+"""Campaign benchmark for the scenario × target axes: a kernel fleet
+tuned over the full (scenario bucket × machine target) product through one
+``OptimizationSession``, vs the single-point default-bucket baseline.
+
+Reports campaign wall time, the resume pass (identical campaign re-run:
+every cell must come back from the scenario-keyed cache index), the shared
+memo's hit rate across the product, and a per-(kernel, bucket, target)
+cycles table.  Also sanity-checks the serve side: nearest-bucket dispatch
+resolves every tuned bucket without optimizing anything new.  In the CI
+``--fast`` smoke set, so BENCH_ci.json tracks the campaign trajectory."""
+
+import tempfile
+import time
+
+from repro.core import build_stall_table
+from repro.sched import OptimizationSession, make_budgeted_strategy
+from repro.sched.cache import ScheduleCache
+from repro.sched.scenario import Scenario
+from repro.launch.optimize import campaign_requests, parse_targets
+from benchmarks.common import emit
+
+FLEET = ("rmsnorm", "softmax")
+SCENARIOS = (None,                                   # single-point baseline
+             Scenario(batch=8, seq_len=4096),
+             Scenario(batch=64, seq_len=32768, occupancy="half"))
+TARGET_NAMES = "tpu-tsass-v1,tpu-tsass-v2"
+
+
+def run(timesteps: int = 64):
+    db = build_stall_table()
+    targets = parse_targets(TARGET_NAMES)
+    units = [(k, s) for k in FLEET for s in SCENARIOS]
+    reqs = campaign_requests(units, targets, force=True)
+    cache_dir = tempfile.mkdtemp(prefix="bench_fleet_")
+    session = OptimizationSession(
+        stall_db=db, cache_dir=cache_dir,
+        strategy=make_budgeted_strategy("greedy", timesteps=timesteps,
+                                        episode_length=8))
+
+    t0 = time.perf_counter()
+    results = session.optimize_many(reqs, max_workers=2)
+    t_campaign = time.perf_counter() - t0
+
+    # resume: the identical campaign is pure index hits
+    t0 = time.perf_counter()
+    again = session.optimize_many(campaign_requests(units, targets))
+    t_resume = time.perf_counter() - t0
+    assert all(r.from_cache for r in again), "campaign resume re-searched"
+
+    # serve side: every tuned bucket dispatches as a pure index lookup
+    sc = ScheduleCache(cache_dir)
+    for k in FLEET:
+        for s in SCENARIOS:
+            for t in targets:
+                art = sc.dispatch(k, s, target=t)
+                assert art is not None, (k, s, t.name)
+
+    stats = session.memo.stats()
+    hit_rate = stats["hits"] / max(stats["hits"] + stats["misses"], 1)
+    cells = len(reqs)
+    print(f"# campaign of {cells} cells ({len(FLEET)} kernels × "
+          f"{len(SCENARIOS)} buckets × {len(targets)} targets): "
+          f"{t_campaign:.2f}s search, {t_resume:.2f}s resume | memo "
+          f"{session.memo.summary()}")
+
+    rows = []
+    for r in results:
+        art = r.artifact
+        rows.append(("fleet_campaign", r.kernel, r.scenario or "default",
+                     r.target,
+                     timesteps, round(art.baseline_cycles, 1),
+                     round(art.optimized_cycles, 1),
+                     round(art.speedup, 4), round(r.seconds, 3)))
+    rows.append(("fleet_campaign_total", "+".join(FLEET), f"{cells}cells",
+                 "x".join(t.name for t in targets), timesteps,
+                 round(t_campaign, 3), round(t_resume, 3),
+                 round(hit_rate, 3), stats["entries"]))
+    emit(rows, header=("bench", "kernel", "bucket", "target", "timesteps",
+                       "baseline_cycles", "optimized_cycles", "speedup",
+                       "seconds"))
+    return rows

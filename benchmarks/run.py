@@ -42,11 +42,12 @@ def main() -> None:
                     help="write a JSON summary of every suite here")
     args = ap.parse_args()
 
-    from benchmarks import (bench_autotune, bench_kernel_throughput,
-                            bench_microbench, bench_moves, bench_pipeline,
-                            bench_reward_loop, bench_rl_sensitivity,
-                            bench_roofline, bench_session,
-                            bench_stall_resolution, bench_workload_analysis)
+    from benchmarks import (bench_autotune, bench_fleet,
+                            bench_kernel_throughput, bench_microbench,
+                            bench_moves, bench_pipeline, bench_reward_loop,
+                            bench_rl_sensitivity, bench_roofline,
+                            bench_session, bench_stall_resolution,
+                            bench_workload_analysis)
 
     suites = [
         ("table1_microbench", bench_microbench.run),
@@ -60,6 +61,8 @@ def main() -> None:
         ("reward_loop", bench_reward_loop.run),
         # fleet sessions: shared-memo optimize_many vs isolated sessions
         ("session_fleet", bench_session.run),
+        # scenario × target campaign: per-bucket tuning + resume + dispatch
+        ("fleet_campaign", bench_fleet.run),
         # pipeline schedules: gpipe vs 1F1B memory/throughput + overlapped
         # pod reduction (measured rows need the 8-device CI bench env)
         ("pipeline_schedules", bench_pipeline.run),

@@ -10,7 +10,7 @@ K steps and the epilogue fires on the last one.
 from __future__ import annotations
 
 import functools
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +19,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
 
+from repro.sched.scenario import Scenario, scenario_steps
 from repro.sched.spec import KernelSpec, TileIO
 
 
@@ -69,15 +70,18 @@ def matmul_leakyrelu(a: jax.Array, b: jax.Array, *, bm: int = 128,
 # schedule-optimizer integration
 # ---------------------------------------------------------------------------
 
-def make_spec(cfg: Dict) -> KernelSpec:
+def make_spec(cfg: Dict, *, scenario: Optional[Scenario] = None
+              ) -> KernelSpec:
     bm, bn, bk = cfg["bm"], cfg["bn"], cfg["bk"]
+    dtype = scenario.dtype if scenario is not None else "bf16"
     return KernelSpec(
         name="matmul_leakyrelu",
         tile_fn=lambda a, b: (jnp.dot(a, b),),
         epilogue_fn=lambda acc: (jnp.where(acc >= 0, acc, 0.01 * acc),),
-        inputs=[TileIO("a", (bm, bk)), TileIO("b", (bk, bn))],
-        outputs=[TileIO("y", (bm, bn))],
-        steps=3,
+        inputs=[TileIO("a", (bm, bk), dtype=dtype),
+                TileIO("b", (bk, bn), dtype=dtype)],
+        outputs=[TileIO("y", (bm, bn), dtype=dtype)],
+        steps=scenario_steps(scenario, bm, default=3),
         accumulate=True,
         config=dict(cfg),
         flops_per_step=2 * bm * bn * bk,

@@ -6,12 +6,13 @@ in the TSASS lowering."""
 from __future__ import annotations
 
 import functools
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.sched.scenario import Scenario, scenario_steps
 from repro.sched.spec import KernelSpec, TileIO
 
 
@@ -41,8 +42,10 @@ def rmsnorm(x: jax.Array, gamma: jax.Array, *, br: int = 8,
     )(x, g2)
 
 
-def make_spec(cfg: Dict) -> KernelSpec:
+def make_spec(cfg: Dict, *, scenario: Optional[Scenario] = None
+              ) -> KernelSpec:
     br, cols = cfg["br"], cfg["cols"]
+    dtype = scenario.dtype if scenario is not None else "bf16"
 
     def tile_fn(x, g):
         var = jnp.mean(x * x, axis=-1, keepdims=True)
@@ -51,10 +54,10 @@ def make_spec(cfg: Dict) -> KernelSpec:
     return KernelSpec(
         name="rmsnorm",
         tile_fn=tile_fn,
-        inputs=[TileIO("x", (br, cols)),
-                TileIO("g", (1, cols), invariant=True)],
-        outputs=[TileIO("y", (br, cols))],
-        steps=4,
+        inputs=[TileIO("x", (br, cols), dtype=dtype),
+                TileIO("g", (1, cols), dtype=dtype, invariant=True)],
+        outputs=[TileIO("y", (br, cols), dtype=dtype)],
+        steps=scenario_steps(scenario, br, default=4),
         accumulate=False,
         config=dict(cfg),
         flops_per_step=4 * br * cols,

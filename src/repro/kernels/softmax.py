@@ -3,12 +3,13 @@ class; paper configuration n_rows=512, n_cols=4096)."""
 
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.sched.scenario import Scenario, scenario_steps
 from repro.sched.spec import KernelSpec, TileIO
 
 
@@ -34,8 +35,10 @@ def softmax(x: jax.Array, *, br: int = 8,
     )(x)
 
 
-def make_spec(cfg: Dict) -> KernelSpec:
+def make_spec(cfg: Dict, *, scenario: Optional[Scenario] = None
+              ) -> KernelSpec:
     br, cols = cfg["br"], cfg["cols"]
+    dtype = scenario.dtype if scenario is not None else "bf16"
 
     def tile_fn(x):
         m = jnp.max(x, axis=-1, keepdims=True)
@@ -45,9 +48,9 @@ def make_spec(cfg: Dict) -> KernelSpec:
     return KernelSpec(
         name="softmax",
         tile_fn=tile_fn,
-        inputs=[TileIO("x", (br, cols))],
-        outputs=[TileIO("y", (br, cols))],
-        steps=4,
+        inputs=[TileIO("x", (br, cols), dtype=dtype)],
+        outputs=[TileIO("y", (br, cols), dtype=dtype)],
+        steps=scenario_steps(scenario, br, default=4),
         accumulate=False,
         config=dict(cfg),
         flops_per_step=5 * br * cols,

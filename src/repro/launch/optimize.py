@@ -3,30 +3,88 @@
     PYTHONPATH=src python -m repro.launch.optimize rmsnorm softmax \
         --strategy ppo --backend fast --timesteps 4096
 
-    # optimize every kernel an architecture's forward pass leans on
+    # optimize every kernel an architecture's forward pass leans on, at
+    # every workload point its supported shapes imply
     PYTHONPATH=src python -m repro.launch.optimize --arch stablelm-3b
+
+    # fleet campaign: scenarios × targets product, resumable per bucket
+    PYTHONPATH=src python -m repro.launch.optimize rmsnorm softmax \
+        --scenarios 8x4096,64x32768xbf16xhalf \
+        --targets tpu-tsass-v1,tpu-tsass-v2
 
     # deploy-time lookup only (no search, no autotune — §4.2 split)
     PYTHONPATH=src python -m repro.launch.optimize rmsnorm --deploy
 
 Sibling of ``launch.train`` / ``launch.serve``: one session shares the
-stall table and the cross-kernel measurement memo across the whole fleet,
-and finished artifacts land in the spec-hash-indexed schedule cache the
-serving launcher reads back.
+per-target stall tables and the cross-kernel measurement memo across the
+whole campaign, and finished artifacts land in the scenario-keyed
+schedule-cache index the serving launcher reads back.  Re-running the
+same campaign without ``--force`` resumes: every already-tuned
+(kernel, target, scenario bucket) cell is a cache hit and only the
+missing cells search.
 """
 
 from __future__ import annotations
 
 import argparse
 import os
+from typing import List, Optional, Sequence, Tuple
 
 from repro.sched import (OptimizationSession, OptimizeRequest,
                          make_budgeted_strategy)
 from repro.sched.backends import BACKENDS, make_backend
 from repro.sched.cache import DEFAULT_CACHE_DIR
+from repro.sched.scenario import (DEFAULT_BUCKET, TARGETS, MachineTarget,
+                                  Scenario, bucket_of, require_target)
 from repro.sched.session import STRATEGIES
 
 MEMO_FILENAME = "measure_memo.pkl"
+
+FleetUnit = Tuple[str, Optional[Scenario]]
+
+
+def parse_scenarios(spec: str) -> List[Scenario]:
+    """Comma-separated ``BATCHxSEQ[xDTYPE[xOCC]]`` list -> Scenarios."""
+    return [Scenario.parse(tok) for tok in spec.split(",") if tok.strip()]
+
+
+def parse_targets(spec: str) -> List[MachineTarget]:
+    """Comma-separated target names -> registered MachineTargets.
+
+    Raises ``KeyError`` (listing the registered names) on an unknown name
+    — a campaign aimed at a machine model that does not exist must fail
+    before any search work starts, not tune against a silent default.
+    """
+    return [require_target(tok.strip()) for tok in spec.split(",")
+            if tok.strip()]
+
+
+def campaign_requests(units: Sequence[FleetUnit],
+                      targets: Optional[Sequence[MachineTarget]] = None,
+                      force: bool = False,
+                      verbose: bool = False) -> List[OptimizeRequest]:
+    """The deduplicated scenarios × targets product as OptimizeRequests.
+
+    One request per distinct (kernel, scenario bucket, target) cell —
+    overlapping units (e.g. positional kernel names that also appear in
+    an ``--arch`` fleet, or two scenarios that fall in the same bucket)
+    collapse to a single search.  Order is first-seen, so positional
+    kernels keep their CLI position.
+    """
+    tgts: Sequence[Optional[MachineTarget]] = targets or [None]
+    reqs: List[OptimizeRequest] = []
+    seen = set()
+    for name, scen in units:
+        for tgt in tgts:
+            key = (name, bucket_of(scen),
+                   tgt.name if tgt is not None else None)
+            if key in seen:
+                continue
+            seen.add(key)
+            reqs.append(OptimizeRequest(kernel=name, scenario=scen,
+                                        target=tgt, force=force,
+                                        verbose=verbose))
+    return reqs
 
 
 def main() -> None:
@@ -36,14 +94,28 @@ def main() -> None:
                          " may be combined with --arch")
     ap.add_argument("--arch", default=None,
                     help="optimize the kernel fleet of this architecture "
+                         "at its derived workload points "
                          "(launch.specs.kernel_fleet)")
+    ap.add_argument("--scenarios", default=None, metavar="LIST",
+                    help="comma-separated workload points "
+                         "BATCHxSEQ[xDTYPE[xOCC]], e.g. "
+                         "'8x4096,64x32768xbf16xhalf': tune every kernel "
+                         "at every point (overrides the --arch-derived "
+                         "points).  Default: --arch derives points from "
+                         "the config's shapes; bare kernel names tune the "
+                         "single default bucket")
+    ap.add_argument("--targets", default=None, metavar="LIST",
+                    help="comma-separated machine-target names; the "
+                         "campaign covers the full scenarios × targets "
+                         "product.  Registered: " + ", ".join(sorted(TARGETS)))
     ap.add_argument("--strategy", default="ppo", choices=sorted(STRATEGIES))
     ap.add_argument("--backend", default="fast", choices=sorted(BACKENDS))
     ap.add_argument("--cache-dir", default=DEFAULT_CACHE_DIR)
     ap.add_argument("--memo-dir", default=None,
                     help="persist the cross-kernel measurement memo here "
                          f"({MEMO_FILENAME}): campaigns warm-start from "
-                         "prior measurements and save back on completion "
+                         "prior measurements and save back on completion; "
+                         "concurrent campaigns merge on save "
                          "(fast/pooled backends)")
     ap.add_argument("--workers", type=int, default=1,
                     help="fleet threads for optimize_many (1 = serial)")
@@ -56,16 +128,27 @@ def main() -> None:
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args()
 
-    names = list(args.kernels)
+    units: List[FleetUnit] = [(n, None) for n in args.kernels]
     if args.arch:
         from repro.configs import get_config
         from repro.launch.specs import kernel_fleet
-        names += [k for k in kernel_fleet(get_config(args.arch, reduced=True))
-                  if k not in names]
-    if not names:
+        units += kernel_fleet(get_config(args.arch, reduced=True))
+    if not units:
         ap.error("give kernel names and/or --arch")
+    if args.scenarios:
+        # explicit workload points win: every named kernel at every point
+        points = parse_scenarios(args.scenarios)
+        names = list(dict.fromkeys(n for n, _ in units))
+        units = [(n, sc) for n in names for sc in points]
+    targets: Optional[List[MachineTarget]] = None
+    if args.targets:
+        try:
+            targets = parse_targets(args.targets)
+        except KeyError as e:
+            ap.error(str(e).strip('"\''))
+
     from repro.kernels import get_kernel
-    for name in names:
+    for name in dict.fromkeys(n for n, _ in units):
         get_kernel(name)               # fail fast on unknown names
 
     backend = make_backend(args.backend)
@@ -91,22 +174,34 @@ def main() -> None:
                                         timesteps=args.timesteps,
                                         episode_length=args.episode_length),
         cache_dir=args.cache_dir)
+
+    def label(kernel: str, bucket: Optional[str],
+              target: Optional[str]) -> str:
+        out = kernel
+        if bucket not in (None, DEFAULT_BUCKET):
+            out += f"@{bucket}"
+        if target is not None and (targets or target != session.target.name):
+            out += f" [{target}]"
+        return out
+
     if args.deploy:
-        for name in names:
-            art = session.deploy(name)
-            print(f"[optimize] {name}: cached config {art.config} "
-                  f"{art.baseline_cycles:.0f} -> {art.optimized_cycles:.0f} "
-                  f"cycles ({art.speedup:.3f}x)")
+        for name, scen in units:
+            for tgt in (targets or [None]):
+                art = session.deploy(name, scenario=scen, target=tgt)
+                print(f"[optimize] {label(name, art.bucket, art.target)}: "
+                      f"cached config {art.config} "
+                      f"{art.baseline_cycles:.0f} -> "
+                      f"{art.optimized_cycles:.0f} "
+                      f"cycles ({art.speedup:.3f}x)")
         return
 
-    results = session.optimize_many(
-        [OptimizeRequest(kernel=n, force=args.force, verbose=args.verbose)
-         for n in names],
-        max_workers=args.workers)
+    reqs = campaign_requests(units, targets, force=args.force,
+                             verbose=args.verbose)
+    results = session.optimize_many(reqs, max_workers=args.workers)
     for res in results:
         art = res.artifact
         tag = "cache" if res.from_cache else res.strategy
-        print(f"[optimize] {res.kernel}: "
+        print(f"[optimize] {label(res.kernel, res.scenario, res.target)}: "
               f"{art.baseline_cycles:.0f} -> {art.optimized_cycles:.0f} "
               f"cycles ({art.speedup:.3f}x, {tag}, {res.seconds:.1f}s)")
     if session.memo is not None:

@@ -35,11 +35,13 @@ def main() -> None:
     if args.schedule_cache:
         from repro.launch.specs import kernel_fleet
         from repro.serve.engine import schedule_plan
-        for name, art in schedule_plan(kernel_fleet(cfg),
-                                       cache_dir=args.schedule_cache).items():
+        for key, art in schedule_plan(kernel_fleet(cfg),
+                                      cache_dir=args.schedule_cache).items():
+            name, bucket = key if isinstance(key, tuple) else (key, None)
+            label = name if bucket in (None, "default") else f"{name}@{bucket}"
             state = (f"{art.speedup:.3f}x ({art.optimized_cycles:.0f} cycles)"
                      if art is not None else "not optimized (-O3 baseline)")
-            print(f"[serve] schedule {name}: {state}")
+            print(f"[serve] schedule {label}: {state}")
     model = for_config(cfg)
     params = model.init_model(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)

@@ -22,6 +22,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import SHAPES, ModelConfig
 from repro.dist import sharding as shd
+from repro.sched.scenario import Scenario
 from repro.models import encdec, lm
 from repro.optim import adamw as adamw_fn, constant_schedule
 from repro.serve import decode as serve_decode
@@ -170,11 +171,10 @@ def lowerable(cfg: ModelConfig, shape_name: str, mesh):
 # schedule-optimizer fleet
 # ---------------------------------------------------------------------------
 
-def kernel_fleet(cfg: ModelConfig):
+def kernel_fleet_names(cfg: ModelConfig):
     """Registry names of the schedule-optimizable kernels this config's
-    forward pass leans on — the fleet ``python -m repro.launch.optimize
-    --arch`` feeds to ``OptimizationSession.optimize_many`` and the serving
-    launcher resolves through the schedule cache."""
+    forward pass leans on (see :func:`kernel_fleet` for the scenario-
+    annotated form the launchers consume)."""
     fleet = ["matmul_leakyrelu", "fused_ff"]
     if cfg.norm == "rmsnorm":
         fleet.append("rmsnorm")
@@ -183,3 +183,42 @@ def kernel_fleet(cfg: ModelConfig):
     if cfg.family != "ssm":            # attention stacks
         fleet += ["flash_attention", "softmax", "bmm"]
     return fleet
+
+
+def shape_scenario(cfg: ModelConfig, shape_name: str) -> Scenario:
+    """The workload point a (config × shape) cell runs the kernels at.
+
+    Train/prefill cells keep the core fully occupied; decode cells sit at
+    half occupancy for large batches and low occupancy for the
+    single-stream long-context shape (one token per step leaves most of
+    the machine idle — a different best schedule than the saturated
+    case)."""
+    seq, batch, kind = SHAPES[shape_name]
+    if kind in ("train", "prefill"):
+        occ = "full"
+    else:
+        occ = "half" if batch >= 64 else "low"
+    return Scenario(batch=batch, seq_len=seq, dtype=cfg.dtype, occupancy=occ)
+
+
+def fleet_scenarios(cfg: ModelConfig):
+    """Distinct workload points (one per scenario bucket) derived from the
+    config's supported shapes, in shape order."""
+    out, seen = [], set()
+    for shape_name in cfg.supported_shapes:
+        sc = shape_scenario(cfg, shape_name)
+        if sc.bucket not in seen:
+            seen.add(sc.bucket)
+            out.append(sc)
+    return out
+
+
+def kernel_fleet(cfg: ModelConfig):
+    """``(kernel, Scenario)`` pairs for every schedule-optimizable kernel
+    this config's forward pass leans on, at every workload point its
+    supported shapes imply — the fleet ``python -m repro.launch.optimize
+    --arch`` feeds to ``OptimizationSession.optimize_many`` and the
+    serving launcher resolves through the schedule cache (one tuned
+    schedule per kernel × scenario bucket)."""
+    return [(name, sc) for name in kernel_fleet_names(cfg)
+            for sc in fleet_scenarios(cfg)]

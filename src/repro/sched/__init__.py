@@ -16,7 +16,11 @@ from repro.sched.backends import (BACKENDS, FastTimingBackend, MeasureBackend,
 from repro.sched.baseline import naive_schedule, schedule
 from repro.sched.cache import (TARGET, Artifact, CacheVersionError,
                                ScheduleCache, load, save)
-from repro.sched.lowering import LoweredKernel, lower
+from repro.sched.lowering import LoweredKernel, lower, resolve_schedule
+from repro.sched.scenario import (DEFAULT_BUCKET, DEFAULT_TARGET, TARGETS,
+                                  MachineTarget, Scenario, get_target,
+                                  nearest_bucket, register_target,
+                                  require_target, unregister_target)
 from repro.sched.session import (STRATEGIES, GreedySwapStrategy, KernelDef,
                                  OptimizationSession, OptimizeRequest,
                                  OptimizeResult, PPOStrategy,
@@ -37,6 +41,10 @@ __all__ = [
     "SharedMeasureMemo", "BACKENDS", "make_backend",
     # cache
     "Artifact", "ScheduleCache", "CacheVersionError", "load", "save",
+    # scenario / target axes
+    "Scenario", "MachineTarget", "TARGETS", "DEFAULT_BUCKET",
+    "DEFAULT_TARGET", "get_target", "require_target", "register_target",
+    "unregister_target", "nearest_bucket", "resolve_schedule",
     # legacy + building blocks
     "CuAsmRL", "KernelDef", "TARGET", "TuneResult", "autotune",
     "naive_schedule", "schedule", "LoweredKernel", "lower", "KernelSpec",

@@ -17,6 +17,7 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core.machine import Machine
 from repro.sched import baseline, lowering
+from repro.sched.scenario import Scenario, build_spec
 from repro.sched.spec import KernelSpec
 
 
@@ -42,16 +43,20 @@ def _work_per_step(spec: KernelSpec) -> float:
 
 def autotune(make_spec: Callable[[Dict], KernelSpec], configs: List[Dict],
              machine: Optional[Machine] = None,
-             time_fn: Optional[Callable] = None) -> TuneResult:
+             time_fn: Optional[Callable] = None,
+             scenario: Optional[Scenario] = None) -> TuneResult:
     """``time_fn`` (program -> cycles) overrides the measurement path — the
     session injects its backend here so grid timings land in the shared
-    memo; default is the machine's timing-only executor."""
+    memo; default is the machine's timing-only executor.  ``scenario``
+    flows into spec construction (scenario-aware builders materialize the
+    scenario's tile stream), so the grid is scored per workload point —
+    the same config grid can pick different winners per bucket."""
     if time_fn is None:
         machine = machine or Machine()
         time_fn = machine.time
     entries: List[TuneEntry] = []
     for cfg in configs:
-        spec = make_spec(cfg)
+        spec = build_spec(make_spec, cfg, scenario)
         program = baseline.schedule(lowering.lower(spec))
         # grid points only need cycle counts: timing-only path (bit-exact
         # against machine.run(program).cycles), no dataflow simulation

@@ -173,29 +173,48 @@ class SharedMeasureMemo:
 
     # -- persistence (fleet warm-starts across campaigns) -------------------
 
-    def save(self, path: str) -> int:
+    def save(self, path: str, merge: bool = True) -> int:
         """Persist every entry to ``path`` (atomic: tmp file + rename).
 
         The on-disk layout stores the *timing-record sequences* themselves
         — not the process-local interned fingerprint ids, which a fresh
-        process would assign differently.  Returns the entry count."""
-        by_fp: Dict[int, list] = {}
-        for (fp, key), (cycles, writer) in self._data.items():
-            by_fp.setdefault(fp, []).append((key, cycles, writer))
+        process would assign differently.
+
+        ``merge=True`` (the default) first folds an existing file at
+        ``path`` into the written payload, so concurrent campaign writers
+        sharing one ``--memo-dir`` converge on the union of their
+        measurements instead of last-writer-wins (values are bit-exact, so
+        whose copy of a shared entry survives is immaterial).  The window
+        between the read and the atomic rename can still drop entries a
+        racing writer lands *inside* it — eviction-grade loss that only
+        costs re-timing, never correctness.  Returns the number of entries
+        written; raises :class:`MemoVersionError` when the existing file
+        is corrupt (overwriting it silently could destroy a healthy
+        sibling campaign's work — pass ``merge=False`` to clobber)."""
+        by_recs: Dict[tuple, Dict] = {}
         recs_of = {fp: recs for recs, fp in self._fp_ids.items()}
+        for (fp, key), (cycles, writer) in self._data.items():
+            if fp in recs_of:
+                by_recs.setdefault(recs_of[fp], {})[key] = (cycles, writer)
+        if merge and os.path.exists(path):
+            for prog in _read_memo_payload(path)["programs"]:
+                dst = by_recs.setdefault(tuple(prog["records"]), {})
+                for key, cycles, writer in prog["entries"]:
+                    dst.setdefault(key, (cycles, writer))   # ours win
         payload = {
             "format": MEMO_FORMAT,
             "version": MEMO_VERSION,
             "programs": [
-                {"records": recs_of[fp], "entries": entries}
-                for fp, entries in sorted(by_fp.items()) if fp in recs_of
+                {"records": recs,
+                 "entries": [(k, c, w) for k, (c, w) in entries.items()]}
+                for recs, entries in by_recs.items()
             ],
         }
         tmp = f"{path}.tmp.{os.getpid()}"
         with open(tmp, "wb") as f:
             pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
         os.replace(tmp, path)
-        return len(self._data)
+        return sum(len(e) for e in by_recs.values())
 
     def load(self, path: str) -> int:
         """Merge the memo persisted at ``path`` into this one (existing
@@ -203,22 +222,7 @@ class SharedMeasureMemo:
         the in-memory rule too).  Returns the number of entries merged.
         Raises :class:`MemoVersionError` on corrupt or unknown-version
         files."""
-        try:
-            with open(path, "rb") as f:
-                payload = pickle.load(f)
-        except (OSError, pickle.UnpicklingError, EOFError, AttributeError,
-                ImportError, IndexError) as e:
-            raise MemoVersionError(
-                f"corrupt measurement memo {path}: {e}") from e
-        if not isinstance(payload, dict) \
-                or payload.get("format") != MEMO_FORMAT:
-            raise MemoVersionError(
-                f"{path} is not a {MEMO_FORMAT} file")
-        if payload.get("version") not in _KNOWN_MEMO_VERSIONS:
-            raise MemoVersionError(
-                f"measurement memo {path} has version "
-                f"{payload.get('version')!r}; this build reads "
-                f"{_KNOWN_MEMO_VERSIONS}")
+        payload = _read_memo_payload(path)
         merged = 0
         for prog in payload["programs"]:
             recs = tuple(prog["records"])
@@ -233,6 +237,28 @@ class SharedMeasureMemo:
                     self._data[k] = (cycles, writer)
                     merged += 1
         return merged
+
+
+def _read_memo_payload(path: str) -> dict:
+    """Read + validate one persisted memo payload (shared by load and the
+    merge-on-save path; every failure mode is a loud MemoVersionError)."""
+    try:
+        with open(path, "rb") as f:
+            payload = pickle.load(f)
+    except (OSError, pickle.UnpicklingError, EOFError, AttributeError,
+            ImportError, IndexError) as e:
+        raise MemoVersionError(
+            f"corrupt measurement memo {path}: {e}") from e
+    if not isinstance(payload, dict) \
+            or payload.get("format") != MEMO_FORMAT:
+        raise MemoVersionError(
+            f"{path} is not a {MEMO_FORMAT} file")
+    if payload.get("version") not in _KNOWN_MEMO_VERSIONS:
+        raise MemoVersionError(
+            f"measurement memo {path} has version "
+            f"{payload.get('version')!r}; this build reads "
+            f"{_KNOWN_MEMO_VERSIONS}")
+    return payload
 
 
 # ---------------------------------------------------------------------------
@@ -264,6 +290,16 @@ class MeasureBackend(Protocol):
         """A program->cycles callable for one autotune grid sweep."""
         ...
 
+    def for_target(self, machine_factory: Callable[[], Machine]
+                   ) -> "MeasureBackend":
+        """A sibling backend measuring through ``machine_factory`` —
+        how a session re-points one backend at another
+        :class:`repro.sched.scenario.MachineTarget` while *sharing* the
+        measurement memo (safe: the fingerprint keys the timing records,
+        and a target whose machine times differently yields different
+        records / falls off the deterministic fast path entirely)."""
+        ...
+
 
 class OracleBackend:
     """Every measurement through the dataflow oracle ``Machine.run`` — the
@@ -291,6 +327,10 @@ class OracleBackend:
         # independent noise per config (the legacy autotune contract)
         machine = self.new_machine()
         return lambda program: machine.run(program).cycles
+
+    def for_target(self, machine_factory: Callable[[], Machine]
+                   ) -> "OracleBackend":
+        return OracleBackend(machine_factory)
 
 
 class FastTimingBackend:
@@ -350,6 +390,10 @@ class FastTimingBackend:
         machine = self.new_machine()
         return machine.time
 
+    def for_target(self, machine_factory: Callable[[], Machine]
+                   ) -> "FastTimingBackend":
+        return FastTimingBackend(machine_factory, memo=self.memo)
+
 
 class PooledBackend(FastTimingBackend):
     """FastTiming plus a measurement worker pool: the batched rollout fans
@@ -362,6 +406,11 @@ class PooledBackend(FastTimingBackend):
                  memo: Optional[SharedMeasureMemo] = None, workers: int = 4):
         super().__init__(machine_factory, memo)
         self.measure_workers = int(workers)
+
+    def for_target(self, machine_factory: Callable[[], Machine]
+                   ) -> "PooledBackend":
+        return PooledBackend(machine_factory, memo=self.memo,
+                             workers=self.measure_workers)
 
 
 BACKENDS = {

@@ -7,19 +7,26 @@ lookup.  At deployment ... it invokes a lookup process instead of training."
 Artifacts are TSASS text (round-trippable through the parser) plus a JSON
 sidecar with measured cycles, the winning autotune config and provenance.
 
-Format v2 adds two things on top of the original flat files (v1):
+Format history:
 
-* sidecars carry ``"version": 2`` — v1 sidecars (no version field) still
-  load; an unknown version or an unreadable file raises
-  :class:`CacheVersionError` / the underlying parse error **loudly**
-  instead of silently missing;
-* a per-kernel ``index.json`` records every cached config under its
-  spec-hash key plus the *chosen* (autotune-best) config, so deploy-time
-  lookup is a single index read — no re-autotune (the legacy
-  ``CuAsmRL.deploy`` re-ran the whole grid just to recover the key).
+* **v1** — flat files, no version field, no index.
+* **v2** — versioned sidecars + a per-kernel ``index.json`` recording every
+  cached config under its spec-hash key plus the *chosen* (autotune-best)
+  config, so deploy-time lookup is a single index read.
+* **v3** — the index grows a ``"scenarios"`` map: one chosen entry per
+  scenario bucket (:mod:`repro.sched.scenario`), keyed
+  ``(kernel, target, scenario_bucket)``.  Sidecars carry the bucket.  The
+  legacy ``"best"`` field doubles as the **default-scenario** entry, which
+  is exactly how v2 indexes (and index-less v1 directories) load through:
+  their single chosen config becomes the ``"default"`` bucket, and
+  scenario-less lookups keep resolving it byte-identically.  Unknown
+  versions and corrupt files still raise :class:`CacheVersionError`
+  **loudly** instead of silently missing.
 
 :class:`ScheduleCache` wraps the files with an in-memory LRU so repeated
-``deploy()`` / serving lookups are O(1) dict hits.
+``deploy()`` / serving lookups are O(1) dict hits, and adds
+:meth:`ScheduleCache.dispatch` — the serve-time shim that resolves a
+request shape to the nearest tuned bucket as a pure index lookup.
 """
 
 from __future__ import annotations
@@ -31,21 +38,33 @@ import os
 import tempfile
 import threading
 from collections import OrderedDict
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 from repro.core.isa import Instruction, program_text
 from repro.core.parser import parse_program
+from repro.sched.scenario import (DEFAULT_BUCKET, MachineTarget, Scenario,
+                                  bucket_of, nearest_bucket)
 
 DEFAULT_CACHE_DIR = os.environ.get("REPRO_SCHED_CACHE", ".repro_cache")
+# the legacy bare-string target name; new code addresses targets through
+# scenario.MachineTarget / get_target (README migration note)
 TARGET = "tpu-tsass-v1"
-CACHE_VERSION = 2
-_KNOWN_VERSIONS = (1, 2)
+CACHE_VERSION = 3
+_KNOWN_VERSIONS = (1, 2, 3)
+
+ScenarioKey = Union[Scenario, str, None]
 
 
 class CacheVersionError(RuntimeError):
     """A cache file exists but cannot be trusted (unknown version /
     malformed payload).  Deliberately loud: a silent miss would retrain and
     overwrite an artifact that may still be served elsewhere."""
+
+
+def _target_name(target: Union[str, MachineTarget, None]) -> str:
+    if target is None:
+        return TARGET
+    return target.name if isinstance(target, MachineTarget) else str(target)
 
 
 @dataclasses.dataclass
@@ -57,25 +76,39 @@ class Artifact:
     baseline_cycles: float
     optimized_cycles: float
     meta: Dict
+    scenario: Optional[str] = None          # bucket key; None = default
 
     @property
     def speedup(self) -> float:
         return self.baseline_cycles / max(self.optimized_cycles, 1.0)
 
+    @property
+    def bucket(self) -> str:
+        return self.scenario or DEFAULT_BUCKET
 
-def cache_key(kernel: str, target: str, config: Dict) -> str:
-    blob = json.dumps({"k": kernel, "t": target, "c": config}, sort_keys=True)
-    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+def cache_key(kernel: str, target: Union[str, MachineTarget], config: Dict,
+              scenario: ScenarioKey = None) -> str:
+    """Content key of one (kernel, target, config, scenario-bucket) cell.
+    Default-bucket keys are byte-identical to the pre-scenario (v2) keys,
+    so existing on-disk artifacts stay addressable."""
+    blob = {"k": kernel, "t": _target_name(target), "c": config}
+    bucket = bucket_of(scenario)
+    if bucket != DEFAULT_BUCKET:
+        blob["s"] = bucket
+    return hashlib.sha256(
+        json.dumps(blob, sort_keys=True).encode()).hexdigest()[:16]
 
 
-def _paths(cache_dir: str, kernel: str, target: str, config: Dict):
-    key = cache_key(kernel, target, config)
-    d = os.path.join(cache_dir, target, kernel)
+def _paths(cache_dir: str, kernel: str, target: Union[str, MachineTarget],
+           config: Dict, scenario: ScenarioKey = None):
+    key = cache_key(kernel, target, config, scenario)
+    d = os.path.join(cache_dir, _target_name(target), kernel)
     return os.path.join(d, f"{key}.tsass"), os.path.join(d, f"{key}.json")
 
 
-def _index_path(cache_dir: str, target: str, kernel: str) -> str:
-    return os.path.join(cache_dir, target, kernel, "index.json")
+def _index_path(cache_dir: str, target, kernel: str) -> str:
+    return os.path.join(cache_dir, _target_name(target), kernel, "index.json")
 
 
 def _atomic_write(path: str, payload: str) -> None:
@@ -86,7 +119,7 @@ def _atomic_write(path: str, payload: str) -> None:
     os.replace(tmp, path)
 
 
-def load_index(cache_dir: str, target: str, kernel: str) -> Optional[Dict]:
+def load_index(cache_dir: str, target, kernel: str) -> Optional[Dict]:
     """The kernel's spec-hash index, or ``None`` when never written (pure
     v1 directory).  Unknown index versions fail loudly."""
     path = _index_path(cache_dir, target, kernel)
@@ -101,6 +134,16 @@ def load_index(cache_dir: str, target: str, kernel: str) -> Optional[Dict]:
         raise CacheVersionError(
             f"cache index {path} has unknown version {idx.get('version')!r}")
     return idx
+
+
+def index_scenarios(idx: Dict) -> Dict[str, Dict]:
+    """bucket -> chosen entry, migrating v2 on the fly: an index written
+    before the scenario axis has only ``"best"``, which *is* its default
+    bucket (that is the whole v2 -> v3 load-through contract)."""
+    scen = dict(idx.get("scenarios", {}))
+    if DEFAULT_BUCKET not in scen and "best" in idx:
+        scen[DEFAULT_BUCKET] = idx["best"]
+    return scen
 
 
 # serializes the index read-modify-write below: concurrent optimize_many
@@ -120,9 +163,23 @@ def _update_index(artifact: Artifact, cache_dir: str, best: bool) -> None:
         if idx is None:
             idx = {"version": CACHE_VERSION, "kernel": artifact.kernel,
                    "target": artifact.target, "entries": {}}
-        key = cache_key(artifact.kernel, artifact.target, artifact.config)
+        idx["version"] = CACHE_VERSION
+        key = cache_key(artifact.kernel, artifact.target, artifact.config,
+                        artifact.scenario)
         idx.setdefault("entries", {})[key] = artifact.config
-        if best or "best" not in idx:
+        bucket = artifact.bucket
+        scen = idx.setdefault("scenarios", {})
+        if DEFAULT_BUCKET not in scen and "best" in idx:
+            scen[DEFAULT_BUCKET] = idx["best"]     # v2 migration on write
+        entry = {"key": key, "config": artifact.config,
+                 "optimized_cycles": artifact.optimized_cycles}
+        if bucket != DEFAULT_BUCKET:
+            entry["scenario"] = artifact.meta.get("scenario", {})
+        if best or bucket not in scen:
+            scen[bucket] = entry
+        if bucket == DEFAULT_BUCKET and (best or "best" not in idx):
+            # keep the legacy field in lockstep so pre-scenario readers
+            # (and the v1-era tooling) still see the chosen config
             idx["best"] = {"key": key, "config": artifact.config,
                            "optimized_cycles": artifact.optimized_cycles}
         os.makedirs(os.path.dirname(path), exist_ok=True)
@@ -131,32 +188,39 @@ def _update_index(artifact: Artifact, cache_dir: str, best: bool) -> None:
 
 def save(artifact: Artifact, cache_dir: str = DEFAULT_CACHE_DIR,
          best: bool = True) -> str:
-    """Write the artifact (v2 sidecar) and record it in the kernel's index.
-    ``best=True`` marks its config as the kernel's chosen one — the config
-    ``deploy()`` resolves without re-running autotune."""
+    """Write the artifact (v3 sidecar) and record it in the kernel's index
+    under its scenario bucket.  ``best=True`` marks its config as the
+    bucket's chosen one — the config ``deploy()`` resolves without
+    re-running autotune."""
     tsass_path, json_path = _paths(cache_dir, artifact.kernel,
-                                   artifact.target, artifact.config)
+                                   artifact.target, artifact.config,
+                                   artifact.scenario)
     os.makedirs(os.path.dirname(tsass_path), exist_ok=True)
+    sidecar = {
+        "version": CACHE_VERSION,
+        "kernel": artifact.kernel, "target": artifact.target,
+        "config": artifact.config,
+        "baseline_cycles": artifact.baseline_cycles,
+        "optimized_cycles": artifact.optimized_cycles,
+        "meta": artifact.meta}
+    if artifact.scenario:
+        sidecar["scenario"] = artifact.scenario
     for path, payload in (
         (tsass_path, program_text(artifact.program) + "\n"),
-        (json_path, json.dumps({
-            "version": CACHE_VERSION,
-            "kernel": artifact.kernel, "target": artifact.target,
-            "config": artifact.config,
-            "baseline_cycles": artifact.baseline_cycles,
-            "optimized_cycles": artifact.optimized_cycles,
-            "meta": artifact.meta}, indent=2)),
+        (json_path, json.dumps(sidecar, indent=2)),
     ):
         _atomic_write(path, payload)
     _update_index(artifact, cache_dir, best)
     return tsass_path
 
 
-def load(kernel: str, target: str, config: Dict,
-         cache_dir: str = DEFAULT_CACHE_DIR) -> Optional[Artifact]:
-    """Load one artifact by (kernel, target, config).  Missing files are a
-    miss (``None``); present-but-untrusted files raise."""
-    tsass_path, json_path = _paths(cache_dir, kernel, target, config)
+def load(kernel: str, target, config: Dict,
+         cache_dir: str = DEFAULT_CACHE_DIR,
+         scenario: ScenarioKey = None) -> Optional[Artifact]:
+    """Load one artifact by (kernel, target, config, scenario).  Missing
+    files are a miss (``None``); present-but-untrusted files raise."""
+    tsass_path, json_path = _paths(cache_dir, kernel, target, config,
+                                   scenario)
     if not (os.path.exists(tsass_path) and os.path.exists(json_path)):
         return None
     return _load_files(tsass_path, json_path)
@@ -180,26 +244,31 @@ def _load_files(tsass_path: str, json_path: str) -> Artifact:
                     config=meta["config"], program=program,
                     baseline_cycles=meta["baseline_cycles"],
                     optimized_cycles=meta["optimized_cycles"],
-                    meta=meta.get("meta", {}))
+                    meta=meta.get("meta", {}),
+                    scenario=meta.get("scenario"))
 
 
 class ScheduleCache:
-    """Spec-hash-indexed artifact store with an in-memory LRU (format v2).
+    """Scenario-indexed artifact store with an in-memory LRU (format v3).
 
-    ``lookup_best`` resolves a kernel's chosen config through its index —
-    one file read the first time, a dict hit afterwards — which is what
-    makes ``deploy()`` and serving free of ``autotune``/``Machine`` work.
-    Returned artifacts carry a fresh ``program`` list, so callers may
-    mutate their copy without poisoning the cache.
+    ``lookup_best`` resolves a kernel's chosen config for one scenario
+    bucket through its index — one file read the first time, a dict hit
+    afterwards — which is what makes ``deploy()`` and serving free of
+    ``autotune``/``Machine`` work.  ``dispatch`` adds the serve-time
+    nearest-bucket resolution over the tuned buckets.  Returned artifacts
+    carry a fresh ``program`` list, so callers may mutate their copy
+    without poisoning the cache.
     """
 
     def __init__(self, cache_dir: str = DEFAULT_CACHE_DIR,
-                 target: str = TARGET, lru_size: int = 64):
+                 target: Union[str, MachineTarget] = TARGET,
+                 lru_size: int = 64):
         self.cache_dir = cache_dir
-        self.target = target
+        self.target = _target_name(target)
         self.lru_size = int(lru_size)
         self._lru: "OrderedDict[str, Artifact]" = OrderedDict()
-        self._best_cfg: Dict[str, Dict] = {}   # kernel -> resolved config
+        # (kernel, target, bucket) -> resolved chosen config
+        self._best_cfg: Dict[tuple, Dict] = {}
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
@@ -227,15 +296,23 @@ class ScheduleCache:
         return dataclasses.replace(art, program=list(art.program),
                                    meta=dict(art.meta))
 
+    def _target(self, target) -> str:
+        return self.target if target is None else _target_name(target)
+
     # -- lookups ------------------------------------------------------------
 
-    def lookup(self, kernel: str, config: Dict) -> Optional[Artifact]:
-        """Artifact for an explicit (kernel, config) pair, LRU-first."""
-        key = cache_key(kernel, self.target, config)
+    def lookup(self, kernel: str, config: Dict,
+               scenario: ScenarioKey = None,
+               target: Union[str, MachineTarget, None] = None
+               ) -> Optional[Artifact]:
+        """Artifact for an explicit (kernel, config, scenario) cell,
+        LRU-first."""
+        tgt = self._target(target)
+        key = cache_key(kernel, tgt, config, scenario)
         art = self._lru_get(key)
         if art is not None:
             return self._fresh(art)
-        art = load(kernel, self.target, config, self.cache_dir)
+        art = load(kernel, tgt, config, self.cache_dir, scenario)
         if art is None:
             with self._lock:
                 self.misses += 1
@@ -244,40 +321,90 @@ class ScheduleCache:
         self._lru_put(key, art)
         return self._fresh(art)
 
-    def best_config(self, kernel: str) -> Optional[Dict]:
-        """The kernel's chosen config, memoized after the first index read
-        (refreshed by ``put(best=True)``; external index rewrites need a
-        fresh ScheduleCache to be seen)."""
-        cfg = self._best_cfg.get(kernel)
+    def best_config(self, kernel: str, scenario: ScenarioKey = None,
+                    target: Union[str, MachineTarget, None] = None
+                    ) -> Optional[Dict]:
+        """The chosen config of one (kernel, scenario-bucket) cell,
+        memoized after the first index read (refreshed by
+        ``put(best=True)``; external index rewrites need a fresh
+        ScheduleCache to be seen)."""
+        tgt = self._target(target)
+        bucket = bucket_of(scenario)
+        memo_key = (kernel, tgt, bucket)
+        cfg = self._best_cfg.get(memo_key)
         if cfg is not None:
             return cfg
-        idx = load_index(self.cache_dir, self.target, kernel)
-        if idx is not None and "best" in idx:
-            cfg = idx["best"]["config"]
-            self._best_cfg[kernel] = cfg
-            return cfg
+        idx = load_index(self.cache_dir, tgt, kernel)
+        if idx is not None:
+            entry = index_scenarios(idx).get(bucket)
+            if entry is not None:
+                cfg = entry["config"]
+                self._best_cfg[memo_key] = cfg
+                return cfg
         return None
 
-    def lookup_best(self, kernel: str) -> Optional[Artifact]:
-        """The kernel's chosen artifact via the index — zero autotune, zero
-        machine execution.  Falls back to the directory listing for pure-v1
-        dirs when exactly one artifact exists (unambiguous); the resolved
-        config is memoized either way, so repeated lookups are LRU hits."""
-        cfg = self.best_config(kernel)
+    def scenario_buckets(self, kernel: str,
+                         target: Union[str, MachineTarget, None] = None
+                         ) -> List[str]:
+        """The tuned buckets of a kernel (index read; v2 indexes and
+        single-artifact v1 directories surface as the default bucket)."""
+        tgt = self._target(target)
+        idx = load_index(self.cache_dir, tgt, kernel)
+        if idx is not None:
+            return sorted(index_scenarios(idx))
+        if self._v1_single_stem(kernel, tgt) is not None:
+            return [DEFAULT_BUCKET]
+        return []
+
+    def lookup_best(self, kernel: str, scenario: ScenarioKey = None,
+                    target: Union[str, MachineTarget, None] = None
+                    ) -> Optional[Artifact]:
+        """The chosen artifact of one (kernel, scenario-bucket) cell via
+        the index — zero autotune, zero machine execution.  Exact bucket
+        only (``dispatch`` does nearest-bucket).  Falls back to the
+        directory listing for pure-v1 dirs when exactly one artifact
+        exists (unambiguous); the resolved config is memoized either way,
+        so repeated lookups are LRU hits."""
+        tgt = self._target(target)
+        cfg = self.best_config(kernel, scenario, tgt)
         if cfg is not None:
-            return self.lookup(kernel, cfg)
-        d = os.path.join(self.cache_dir, self.target, kernel)
-        if os.path.isdir(d):
-            sidecars = sorted(f for f in os.listdir(d)
-                              if f.endswith(".json") and f != "index.json")
-            if len(sidecars) == 1:
-                stem = sidecars[0][:-5]   # the stem IS the spec-hash key
+            return self.lookup(kernel, cfg, scenario, tgt)
+        bucket = bucket_of(scenario)
+        if bucket == DEFAULT_BUCKET:
+            stem = self._v1_single_stem(kernel, tgt)
+            if stem is not None:
+                d = os.path.join(self.cache_dir, tgt, kernel)
                 art = self._load_stem(d, stem)
-                self._best_cfg[kernel] = art.config
+                self._best_cfg[(kernel, tgt, DEFAULT_BUCKET)] = art.config
                 self._lru_put(stem, art)
                 return self._fresh(art)
         with self._lock:
             self.misses += 1
+        return None
+
+    def dispatch(self, kernel: str, scenario: ScenarioKey = None,
+                 target: Union[str, MachineTarget, None] = None
+                 ) -> Optional[Artifact]:
+        """Serve-time dispatch: resolve the request's scenario to the
+        *nearest* tuned bucket and return that bucket's chosen artifact —
+        a pure index lookup (zero autotune / machine execution), falling
+        back through the default bucket so pre-scenario caches keep
+        serving.  ``None`` only when the kernel was never optimized."""
+        tgt = self._target(target)
+        bucket = nearest_bucket(self.scenario_buckets(kernel, tgt), scenario)
+        if bucket is None:
+            with self._lock:
+                self.misses += 1
+            return None
+        return self.lookup_best(kernel, bucket, tgt)
+
+    def _v1_single_stem(self, kernel: str, tgt: str) -> Optional[str]:
+        d = os.path.join(self.cache_dir, tgt, kernel)
+        if os.path.isdir(d):
+            sidecars = sorted(f for f in os.listdir(d)
+                              if f.endswith(".json") and f != "index.json")
+            if len(sidecars) == 1:
+                return sidecars[0][:-5]   # the stem IS the spec-hash key
         return None
 
     def _load_stem(self, d: str, stem: str) -> Artifact:
@@ -289,10 +416,12 @@ class ScheduleCache:
 
     def put(self, artifact: Artifact, best: bool = True) -> str:
         path = save(artifact, self.cache_dir, best=best)
-        key = cache_key(artifact.kernel, self.target, artifact.config)
+        key = cache_key(artifact.kernel, artifact.target, artifact.config,
+                        artifact.scenario)
         self._lru_put(key, self._fresh(artifact))
         if best:
-            self._best_cfg[artifact.kernel] = artifact.config
+            self._best_cfg[(artifact.kernel, artifact.target,
+                            artifact.bucket)] = artifact.config
         return path
 
     def stats(self) -> Dict[str, int]:

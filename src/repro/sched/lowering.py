@@ -371,3 +371,28 @@ def lower(spec: KernelSpec) -> LoweredKernel:
 
     lo.emit("EXIT", [])
     return LoweredKernel(spec=spec, program=lo.prog)
+
+
+# ---------------------------------------------------------------------------
+# serve-time dispatch shim
+# ---------------------------------------------------------------------------
+
+def resolve_schedule(cache, kernel: str, scenario=None, target=None):
+    """Deploy-time counterpart of :func:`lower`: instead of *building* a
+    schedule, resolve the one already tuned for this workload point.
+
+    The request's scenario (shape/dtype/occupancy of the traffic actually
+    hitting the engine) dispatches to the **nearest tuned bucket** of the
+    kernel's cache index — a pure index lookup, zero autotune and zero
+    machine execution, falling back through the default bucket so
+    pre-scenario caches keep serving.  Returns ``None`` for a kernel that
+    was never optimized (it serves the -O3 baseline this module's listing
+    feeds to :mod:`repro.sched.baseline`).
+
+    ``cache`` is a :class:`repro.sched.cache.ScheduleCache`; ``scenario``
+    a :class:`repro.sched.scenario.Scenario`, a bucket string, or ``None``
+    for the legacy single-point lookup.
+    """
+    if scenario is None:
+        return cache.lookup_best(kernel, target=target)
+    return cache.dispatch(kernel, scenario, target=target)

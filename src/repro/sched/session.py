@@ -49,6 +49,8 @@ from repro.sched import baseline, lowering, verify
 from repro.sched.backends import (FastTimingBackend, MeasureBackend,
                                   make_backend)
 from repro.sched.cache import DEFAULT_CACHE_DIR, TARGET, Artifact, ScheduleCache
+from repro.sched.scenario import (MachineTarget, Scenario, bucket_of,
+                                  build_spec, get_target)
 from repro.sched.spec import KernelSpec
 
 
@@ -76,6 +78,14 @@ class OptimizeRequest:
     a pinned config skips autotune.  ``strategy`` overrides the session
     default (a name from :data:`STRATEGIES` or a strategy instance);
     ``ppo`` configures the PPO strategy when it is the one running.
+
+    ``scenario`` tunes the kernel for one workload point — the scenario
+    flows into autotune and spec construction, and the artifact lands in
+    the scenario's bucket of the cache index (``None`` keeps the legacy
+    single-point behaviour bit-exactly: default bucket, identical spec).
+    ``target`` overrides the session's machine target for this request —
+    a campaign can sweep targets through one session, each measured on its
+    own machine against its own stall table.
     """
     kernel: Union[str, KernelDef]
     config: Optional[Dict] = None
@@ -84,6 +94,8 @@ class OptimizeRequest:
     verify_seeds: Optional[int] = None
     force: bool = False
     verbose: bool = False
+    scenario: Optional[Scenario] = None
+    target: Optional[Union[str, MachineTarget]] = None
 
     @property
     def kernel_name(self) -> str:
@@ -102,6 +114,8 @@ class OptimizeResult:
     tune: Optional[autotune_mod.TuneResult] = None
     game: Optional[GameResult] = None       # populated by the PPO strategy
     seconds: float = 0.0
+    scenario: Optional[str] = None          # bucket key (None = default)
+    target: str = TARGET
 
     @property
     def speedup(self) -> float:
@@ -290,7 +304,8 @@ class OptimizationSession:
 
     def __init__(self, backend: Union[str, MeasureBackend, None] = None,
                  strategy: Union[str, SearchStrategy] = "ppo",
-                 cache_dir: str = DEFAULT_CACHE_DIR, target: str = TARGET,
+                 cache_dir: str = DEFAULT_CACHE_DIR,
+                 target: Union[str, MachineTarget] = TARGET,
                  stall_db: Optional[Dict[str, int]] = None,
                  verify_seeds: int = 4,
                  cache: Optional[ScheduleCache] = None):
@@ -300,14 +315,16 @@ class OptimizationSession:
             backend = make_backend(backend)
         self.backend = backend
         self.strategy = strategy
-        self.target = target
+        self.target = get_target(target)
         self.verify_seeds = verify_seeds
         self.cache = cache if cache is not None else \
-            ScheduleCache(cache_dir, target)
-        self._stall_tables: Dict[str, Dict[str, int]] = {}
+            ScheduleCache(cache_dir, self.target)
+        self._stall_tables: Dict[MachineTarget, Dict[str, int]] = {}
         if stall_db is not None:
-            self._stall_tables[target] = stall_db
+            self._stall_tables[self.target] = stall_db
         self._stall_lock = threading.Lock()
+        self._backend_lock = threading.Lock()
+        self._target_backends: Dict[MachineTarget, MeasureBackend] = {}
 
     # -- shared per-target state ---------------------------------------------
 
@@ -317,15 +334,44 @@ class OptimizationSession:
         backends that do not share measurements)."""
         return getattr(self.backend, "memo", None)
 
-    def stall_table(self, target: Optional[str] = None) -> Dict[str, int]:
-        """Table 1 for ``target``, microbenchmarked once per session."""
-        target = target or self.target
+    def stall_table(self, target: Union[str, MachineTarget, None] = None
+                    ) -> Dict[str, int]:
+        """Table 1 for ``target``, microbenchmarked once per session on
+        the target's own machine (tables are keyed by the
+        :class:`MachineTarget` itself, so a campaign over several targets
+        never mixes their stall counts)."""
+        target = get_target(target) if target is not None else self.target
         with self._stall_lock:
             db = self._stall_tables.get(target)
             if db is None:
-                db = build_stall_table(machine=self.backend.new_machine())
+                db = build_stall_table(
+                    machine=self.backend_for(target).new_machine())
                 self._stall_tables[target] = db
             return db
+
+    def backend_for(self, target: Union[str, MachineTarget, None]
+                    ) -> MeasureBackend:
+        """The measurement backend for ``target``: the session backend for
+        the session's own target (legacy path, including custom machine
+        factories), a memo-sharing sibling re-pointed at the target's
+        machine for every other — so one campaign's measurements all flow
+        through one memo while never mixing machines."""
+        target = get_target(target) if target is not None else self.target
+        if target == self.target:
+            return self.backend
+        with self._backend_lock:
+            be = self._target_backends.get(target)
+            if be is None:
+                for_target = getattr(self.backend, "for_target", None)
+                if for_target is None:
+                    raise TypeError(
+                        f"backend {self.backend.name!r} cannot re-point at "
+                        f"target {target.name!r}: it defines no "
+                        f"for_target(machine_factory) (see "
+                        f"repro.sched.backends.MeasureBackend)")
+                be = for_target(target.new_machine)
+                self._target_backends[target] = be
+            return be
 
     # -- resolution -----------------------------------------------------------
 
@@ -355,48 +401,59 @@ class OptimizationSession:
         t_start = time.time()
         kdef = self._resolve_kernel(request.kernel)
         strategy = self._resolve_strategy(request)
+        scenario = request.scenario
+        bucket = scenario.bucket if scenario is not None else None
+        target = (get_target(request.target) if request.target is not None
+                  else self.target)
+        backend = self.backend_for(target)
 
         tune = None
         if request.config is not None:
             cfg = dict(request.config)
         else:
             # §3.1 stage 1 — grid timings flow through the shared memo, so
-            # a fleet re-times each distinct candidate schedule only once
+            # a fleet re-times each distinct candidate schedule only once;
+            # the scenario shapes the specs, so each bucket scores the
+            # grid on its own workload point
             tune = autotune_mod.autotune(
                 kdef.make_spec, kdef.configs,
-                time_fn=self.backend.autotune_time_fn(kdef.name))
+                time_fn=backend.autotune_time_fn(kdef.name),
+                scenario=scenario)
             cfg = tune.best.config
 
         if not request.force:
-            art = self.cache.lookup(kdef.name, cfg)
+            art = self.cache.lookup(kdef.name, cfg, scenario=scenario,
+                                    target=target)
             if art is not None:
                 return OptimizeResult(
                     kernel=kdef.name, artifact=art, config=cfg,
                     from_cache=True, strategy=strategy.name,
-                    backend=self.backend.name, stats=[], tune=tune,
-                    seconds=time.time() - t_start)
+                    backend=backend.name, stats=[], tune=tune,
+                    seconds=time.time() - t_start,
+                    scenario=bucket, target=target.name)
 
-        spec: KernelSpec = kdef.make_spec(cfg)
+        spec: KernelSpec = build_spec(kdef.make_spec, cfg, scenario)
         o3 = baseline.schedule(lowering.lower(spec))
-        outcome = strategy.search(o3, stall_db=self.stall_table(),
-                                  backend=self.backend, owner=kdef.name,
+        outcome = strategy.search(o3, stall_db=self.stall_table(target),
+                                  backend=backend, owner=kdef.name,
                                   verbose=request.verbose)
 
         n_seeds = (request.verify_seeds if request.verify_seeds is not None
                    else self.verify_seeds)
         check = verify.probabilistic_test(o3, outcome.best_program,
                                           n_seeds=n_seeds,
-                                          machine=self.backend.new_machine())
+                                          machine=backend.new_machine())
         if not check.ok:
             raise RuntimeError(
                 f"probabilistic testing FAILED for {kdef.name}: "
                 f"seeds {check.failures} — masking bug, refusing to cache")
 
         art = Artifact(
-            kernel=kdef.name, target=self.target, config=cfg,
+            kernel=kdef.name, target=target.name, config=cfg,
             program=outcome.best_program,
             baseline_cycles=outcome.baseline_cycles,
             optimized_cycles=outcome.best_cycles,
+            scenario=bucket,
             meta={
                 "autotune": ([dataclasses.asdict(e) for e in tune.entries]
                              if tune is not None else []),
@@ -405,16 +462,19 @@ class OptimizationSession:
                 "ppo_updates": len(outcome.stats),
                 "verify_seeds": check.n_seeds,
                 "strategy": strategy.name,
-                "backend": self.backend.name,
+                "backend": backend.name,
+                "scenario": (dataclasses.asdict(scenario)
+                             if scenario is not None else {}),
             })
-        # a pinned config is an entry, not necessarily the kernel's chosen
+        # a pinned config is an entry, not necessarily the bucket's chosen
         # deploy config; autotuned runs define (or refresh) the index best
         self.cache.put(art, best=(request.config is None))
         return OptimizeResult(
             kernel=kdef.name, artifact=art, config=cfg, from_cache=False,
-            strategy=strategy.name, backend=self.backend.name,
+            strategy=strategy.name, backend=backend.name,
             stats=outcome.stats, tune=tune, game=outcome.game,
-            seconds=time.time() - t_start)
+            seconds=time.time() - t_start, scenario=bucket,
+            target=target.name)
 
     def optimize_many(self,
                       requests: Iterable[Union[OptimizeRequest, str, KernelDef]],
@@ -429,7 +489,10 @@ class OptimizationSession:
         reqs = [r if isinstance(r, OptimizeRequest) else OptimizeRequest(kernel=r)
                 for r in requests]
         if max_workers is not None and max_workers > 1 and len(reqs) > 1:
-            self.stall_table()          # build once, not racing in the pool
+            # build each target's stall table once, not racing in the pool
+            for tgt in {get_target(r.target) if r.target is not None
+                        else self.target for r in reqs}:
+                self.stall_table(tgt)
             with ThreadPoolExecutor(max_workers=max_workers) as pool:
                 return list(pool.map(self.optimize, reqs))
         return [self.optimize(r) for r in reqs]
@@ -437,16 +500,31 @@ class OptimizationSession:
     # -- §4.2 Listing 5: deployment lookup ------------------------------------
 
     def deploy(self, kernel: Union[str, KernelDef],
-               config: Optional[Dict] = None) -> Artifact:
+               config: Optional[Dict] = None,
+               scenario: Optional[Union[Scenario, str]] = None,
+               target: Optional[Union[str, MachineTarget]] = None
+               ) -> Artifact:
         """Deploy-time lookup: resolve the kernel's chosen config through
         the cache index and return the artifact — **no** autotune, no
         machine execution (the paper's search/deploy split, minus the
-        legacy bug of re-running the grid search per lookup)."""
+        legacy bug of re-running the grid search per lookup).
+
+        With a ``scenario``, the request shape dispatches to the *nearest*
+        tuned bucket (still a pure index read); without one, the default
+        bucket resolves exactly as before the scenario axis existed."""
         name = kernel if isinstance(kernel, str) else kernel.name
-        art = (self.cache.lookup(name, config) if config is not None
-               else self.cache.lookup_best(name))
+        if config is not None:
+            art = self.cache.lookup(name, config, scenario=scenario,
+                                    target=target)
+        elif scenario is not None:
+            art = self.cache.dispatch(name, scenario, target=target)
+        else:
+            art = self.cache.lookup_best(name, target=target)
         if art is None:
             raise FileNotFoundError(
-                f"no cached schedule for {name}; run optimize() "
-                f"offline first (the paper's search/deploy split)")
+                f"no cached schedule for {name}"
+                + (f" (scenario {bucket_of(scenario)})"
+                   if scenario is not None else "")
+                + "; run optimize() offline first (the paper's "
+                  "search/deploy split)")
         return art

@@ -8,7 +8,7 @@ token loop is one lax.scan, so serving compiles to a single program.
 
 from __future__ import annotations
 
-from typing import Dict, Iterable, Optional
+from typing import Dict, Iterable, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -17,25 +17,45 @@ from repro.configs.base import ModelConfig
 from repro.dist import sharding as shd
 from repro.sched.cache import (DEFAULT_CACHE_DIR, TARGET, Artifact,
                                ScheduleCache)
+from repro.sched.lowering import resolve_schedule
+from repro.sched.scenario import MachineTarget, Scenario
 from repro.serve.decode import decode_step, init_caches
 
+FleetItem = Union[str, Tuple[str, Optional[Scenario]]]
 
-def schedule_plan(kernel_names: Iterable[str],
+
+def schedule_plan(kernel_names: Iterable[FleetItem],
                   cache_dir: str = DEFAULT_CACHE_DIR,
-                  target: str = TARGET,
-                  cache: Optional[ScheduleCache] = None
-                  ) -> Dict[str, Optional[Artifact]]:
+                  target: Union[str, MachineTarget] = TARGET,
+                  cache: Optional[ScheduleCache] = None,
+                  scenario: Optional[Scenario] = None
+                  ) -> Dict[Union[str, Tuple[str, str]], Optional[Artifact]]:
     """Deploy-time schedule lookup for the engine's kernel fleet.
 
-    Resolves each kernel's RL-optimized TSASS artifact through the v2
-    spec-hash cache index — O(1) per kernel, **no** autotune and no machine
-    execution (the paper's §4.2 search/deploy split).  ``None`` marks a
-    kernel that was never optimized (it serves the -O3 baseline).  An
-    unreadable/unknown-version cache raises loudly rather than silently
-    degrading a production rollout.
+    ``kernel_names`` takes bare registry names (legacy: keys are the
+    names, resolved at ``scenario`` — the engine's current traffic point,
+    or the default bucket when ``None``) and/or the ``(kernel, scenario)``
+    pairs :func:`repro.launch.specs.kernel_fleet` yields (keys are
+    ``(name, bucket)``, one resolution per workload the model serves).
+
+    Every resolution goes through the
+    :func:`repro.sched.lowering.resolve_schedule` dispatch shim: nearest
+    tuned scenario bucket, pure index lookup — **no** autotune and no
+    machine execution at serve time (the paper's §4.2 search/deploy
+    split).  ``None`` marks a kernel that was never optimized (it serves
+    the -O3 baseline).  An unreadable/unknown-version cache raises loudly
+    rather than silently degrading a production rollout.
     """
     sc = cache if cache is not None else ScheduleCache(cache_dir, target)
-    return {name: sc.lookup_best(name) for name in kernel_names}
+    plan: Dict[Union[str, Tuple[str, str]], Optional[Artifact]] = {}
+    for item in kernel_names:
+        if isinstance(item, str):
+            plan[item] = resolve_schedule(sc, item, scenario)
+        else:
+            name, scen = item
+            key = (name, scen.bucket if scen is not None else "default")
+            plan[key] = resolve_schedule(sc, name, scen)
+    return plan
 
 
 def generate(params: Dict, cfg: ModelConfig, prompt: jax.Array,

@@ -1,0 +1,350 @@
+"""Scenario × target axes: bucketing/dispatch, cache v3 scenario-keyed
+roundtrip, v2 -> v3 load-through migration, the campaign orchestrator's
+scenarios × targets product (dedupe, resume, loud unknown-target errors),
+zero-measurement serve-time dispatch, and memo merge-on-save."""
+
+import json
+import os
+
+import pytest
+
+from repro.core import Machine
+from repro.kernels import get_kernel
+from repro.launch.optimize import (campaign_requests, parse_scenarios,
+                                   parse_targets)
+from repro.sched import OptimizationSession, cache, make_budgeted_strategy
+from repro.sched.backends import SharedMeasureMemo
+from repro.sched.cache import ScheduleCache
+from repro.sched.scenario import (DEFAULT_BUCKET, MachineTarget, Scenario,
+                                  bucket_of, get_target, nearest_bucket,
+                                  require_target)
+from repro.serve.engine import schedule_plan
+
+TINY = dict(timesteps=64, episode_length=8)
+
+
+def _tiny_session(tmp_path, stall_db, sub="cache"):
+    return OptimizationSession(
+        strategy=make_budgeted_strategy("greedy", **TINY),
+        cache_dir=str(tmp_path / sub), stall_db=stall_db, verify_seeds=2)
+
+
+# ---------------------------------------------------------------------------
+# scenario model
+# ---------------------------------------------------------------------------
+
+def test_scenario_bucketing_parse_and_normalization():
+    s = Scenario(batch=12, seq_len=3000, dtype="bfloat16", occupancy="half")
+    assert s.dtype == "bf16"                       # alias normalization
+    assert s.bucket == "b16_s4096_bf16_half"       # pow2 edges round up
+    assert Scenario.parse("256x4096") == Scenario(batch=256, seq_len=4096)
+    assert Scenario.parse("8x32768xf32xlow").dtype == "f32"
+    assert Scenario(batch=8, seq_len=8192).bucket == \
+        Scenario(batch=5, seq_len=4097).bucket      # same bucket cell
+    with pytest.raises(ValueError, match="BATCHxSEQ"):
+        Scenario.parse("just-one-token")
+    with pytest.raises(ValueError, match="occupancy"):
+        Scenario(batch=1, seq_len=1, occupancy="over9000")
+    assert bucket_of(None) == DEFAULT_BUCKET
+    assert bucket_of("b8_s4096_bf16_full") == "b8_s4096_bf16_full"
+
+
+def test_nearest_bucket_dispatch_metric():
+    tuned = ["b8_s4096_bf16_full", "b64_s32768_bf16_half", DEFAULT_BUCKET]
+    # exact bucket wins
+    assert nearest_bucket(tuned, Scenario(batch=8, seq_len=4096)) == \
+        "b8_s4096_bf16_full"
+    # nearest by log2 distance on batch/seq
+    assert nearest_bucket(tuned, Scenario(batch=12, seq_len=4096)) == \
+        "b8_s4096_bf16_full"
+    assert nearest_bucket(
+        tuned, Scenario(batch=128, seq_len=32768, occupancy="half")) == \
+        "b64_s32768_bf16_half"
+    # dtype mismatch outweighs any shape distance
+    assert nearest_bucket(
+        ["b8_s4096_f32_full", "b1024_s1024_bf16_full"],
+        Scenario(batch=8, seq_len=4096)) == "b1024_s1024_bf16_full"
+    # deterministic tie-break: equal distance resolves lexicographically
+    assert nearest_bucket(
+        ["b16_s4096_bf16_full", "b4_s4096_bf16_full"],
+        Scenario(batch=8, seq_len=4096)) == "b16_s4096_bf16_full"
+    # default bucket is the fallback of last resort, never the winner
+    assert nearest_bucket([DEFAULT_BUCKET],
+                          Scenario(batch=1, seq_len=1)) == DEFAULT_BUCKET
+    assert nearest_bucket([], Scenario(batch=1, seq_len=1)) is None
+
+
+def test_machine_targets_registry():
+    assert get_target(None).name == "tpu-tsass-v1"
+    assert get_target("tpu-tsass-v2").seed == 1
+    # unknown names: get_target admits ad-hoc partitions ...
+    adhoc = get_target("my-private-partition")
+    assert adhoc.name == "my-private-partition"
+    # ... require_target (the --targets contract) fails loudly, listing
+    # what is registered
+    with pytest.raises(KeyError, match="tpu-tsass-v1"):
+        require_target("tpu-tsass-v99")
+    # equal-named handles compare equal (dict-key identity), factories
+    # excluded from the comparison
+    assert MachineTarget("x", machine_factory=Machine) == MachineTarget("x")
+
+
+# ---------------------------------------------------------------------------
+# cache v3: scenario-keyed index + v2 load-through
+# ---------------------------------------------------------------------------
+
+def test_cache_v3_scenario_keyed_roundtrip(tmp_path, kernel_programs):
+    prog = kernel_programs["softmax"]
+    sc = ScheduleCache(str(tmp_path), target="test-target")
+    full = Scenario(batch=8, seq_len=4096)
+    half = Scenario(batch=64, seq_len=32768, occupancy="half")
+    sc.put(cache.Artifact("softmax", "test-target", {"br": 8}, prog,
+                          100.0, 90.0, {}, scenario=full.bucket))
+    sc.put(cache.Artifact("softmax", "test-target", {"br": 32}, prog,
+                          100.0, 80.0, {}, scenario=half.bucket))
+    sc.put(cache.Artifact("softmax", "test-target", {"br": 16}, prog,
+                          100.0, 95.0, {}))        # default bucket
+    assert sc.scenario_buckets("softmax") == sorted(
+        [full.bucket, half.bucket, DEFAULT_BUCKET])
+    # per-bucket chosen configs are distinct index entries
+    assert sc.best_config("softmax", full) == {"br": 8}
+    assert sc.best_config("softmax", half) == {"br": 32}
+    assert sc.best_config("softmax") == {"br": 16}
+    assert sc.lookup_best("softmax", half).optimized_cycles == 80.0
+    assert sc.lookup_best("softmax", half).scenario == half.bucket
+    # scenario-less lookup keeps resolving the default bucket
+    assert sc.lookup_best("softmax").optimized_cycles == 95.0
+    idx = cache.load_index(str(tmp_path), "test-target", "softmax")
+    assert idx["version"] == 3
+    assert len(idx["scenarios"]) == 3
+    # the default-bucket entry also populates the legacy "best" field
+    assert idx["best"]["config"] == {"br": 16}
+
+
+def _write_v2_dir(art, cache_dir):
+    """Replicate the pre-scenario v2 on-disk format exactly: versioned
+    sidecar + index with only entries/best, no scenarios map."""
+    key = cache.cache_key(art.kernel, art.target, art.config)
+    d = os.path.join(cache_dir, art.target, art.kernel)
+    os.makedirs(d, exist_ok=True)
+    from repro.core.isa import program_text
+    with open(os.path.join(d, f"{key}.tsass"), "w") as f:
+        f.write(program_text(art.program) + "\n")
+    with open(os.path.join(d, f"{key}.json"), "w") as f:
+        json.dump({"version": 2, "kernel": art.kernel, "target": art.target,
+                   "config": art.config,
+                   "baseline_cycles": art.baseline_cycles,
+                   "optimized_cycles": art.optimized_cycles,
+                   "meta": art.meta}, f)
+    with open(os.path.join(d, "index.json"), "w") as f:
+        json.dump({"version": 2, "kernel": art.kernel, "target": art.target,
+                   "entries": {key: art.config},
+                   "best": {"key": key, "config": art.config,
+                            "optimized_cycles": art.optimized_cycles}}, f)
+    return key
+
+
+def test_v2_cache_dir_loads_through_as_default_bucket(tmp_path,
+                                                      kernel_programs):
+    prog = kernel_programs["softmax"]
+    art = cache.Artifact("softmax", "test-target", {"br": 8, "cols": 4096},
+                         prog, 100.0, 90.0, {})
+    _write_v2_dir(art, str(tmp_path))
+    sc = ScheduleCache(str(tmp_path), target="test-target")
+    # the v2 best IS the default bucket
+    assert sc.scenario_buckets("softmax") == [DEFAULT_BUCKET]
+    assert sc.lookup_best("softmax").optimized_cycles == 90.0
+    # scenario dispatch on a v2 dir falls back to the default bucket
+    got = sc.dispatch("softmax", Scenario(batch=4, seq_len=1024))
+    assert got is not None and got.optimized_cycles == 90.0
+    # writing a scenario entry migrates the index to v3 without losing
+    # the legacy best
+    sc.put(cache.Artifact("softmax", "test-target", {"br": 32}, prog,
+                          100.0, 70.0, {},
+                          scenario=Scenario(batch=4, seq_len=1024).bucket))
+    idx = cache.load_index(str(tmp_path), "test-target", "softmax")
+    assert idx["version"] == 3
+    assert idx["best"]["optimized_cycles"] == 90.0
+    scen = cache.index_scenarios(idx)
+    assert scen[DEFAULT_BUCKET]["optimized_cycles"] == 90.0
+    assert scen["b4_s1024_bf16_full"]["optimized_cycles"] == 70.0
+    # ... and the new bucket now wins its own dispatch
+    sc2 = ScheduleCache(str(tmp_path), target="test-target")
+    assert sc2.dispatch(
+        "softmax", Scenario(batch=4, seq_len=1024)).optimized_cycles == 70.0
+
+
+def test_cache_key_default_bucket_is_byte_identical():
+    """The whole v2 compat story: scenario-less keys never changed."""
+    legacy = cache.cache_key("k", "t", {"a": 1})
+    assert cache.cache_key("k", "t", {"a": 1}, None) == legacy
+    assert cache.cache_key("k", "t", {"a": 1}, DEFAULT_BUCKET) == legacy
+    assert cache.cache_key("k", "t", {"a": 1},
+                           Scenario(batch=8, seq_len=4096)) != legacy
+
+
+# ---------------------------------------------------------------------------
+# scenario-aware spec construction
+# ---------------------------------------------------------------------------
+
+def test_make_spec_scenario_changes_spec_and_none_is_legacy():
+    kdef = get_kernel("rmsnorm")
+    cfg = kdef.configs[0]
+    legacy = kdef.make_spec(cfg)                     # positional: untouched
+    assert legacy.steps == 4 and legacy.inputs[0].dtype == "bf16"
+    scen = Scenario(batch=64, seq_len=32768, dtype="f32", occupancy="low")
+    spec = kdef.make_spec(cfg, scenario=scen)
+    assert spec.inputs[0].dtype == "f32"
+    assert spec.steps != legacy.steps
+    # build_spec routes the kwarg only to scenario-aware builders
+    from repro.sched.scenario import build_spec
+    assert build_spec(kdef.make_spec, cfg, None).steps == legacy.steps
+    assert build_spec(lambda c: kdef.make_spec(c), cfg, scen).steps == \
+        legacy.steps                                  # legacy builder: no kwarg
+
+
+def test_kernel_fleet_yields_scenario_pairs():
+    from repro.configs import get_config
+    from repro.launch.specs import (fleet_scenarios, kernel_fleet,
+                                    kernel_fleet_names, shape_scenario)
+    cfg = get_config("stablelm-3b", reduced=True)
+    pairs = kernel_fleet(cfg)
+    names = kernel_fleet_names(cfg)
+    assert all(isinstance(n, str) and isinstance(s, Scenario)
+               for n, s in pairs)
+    assert list(dict.fromkeys(n for n, _ in pairs)) == names
+    # one scenario per distinct bucket of the config's supported shapes
+    scens = fleet_scenarios(cfg)
+    assert len({s.bucket for s in scens}) == len(scens)
+    assert {(n, s.bucket) for n, s in pairs} == \
+        {(n, s.bucket) for n in names for s in scens}
+    # shapes drive the occupancy class: train/prefill saturate, decode
+    # rides the batch size
+    assert shape_scenario(cfg, "train_4k").occupancy == "full"
+    assert shape_scenario(cfg, "decode_32k").occupancy == "half"
+    assert shape_scenario(cfg, "long_500k").occupancy == "low"
+
+
+# ---------------------------------------------------------------------------
+# campaign orchestrator
+# ---------------------------------------------------------------------------
+
+def test_campaign_requests_product_and_dedupe():
+    scens = parse_scenarios("8x4096,64x32768xbf16xhalf")
+    tgts = parse_targets("tpu-tsass-v1,tpu-tsass-v2")
+    # positional kernel overlapping the fleet-derived unit collapses, as
+    # do two scenarios in the same bucket
+    units = ([("rmsnorm", None), ("rmsnorm", None)]
+             + [("rmsnorm", s) for s in scens]
+             + [("rmsnorm", Scenario(batch=5, seq_len=4096))])  # same bucket
+    reqs = campaign_requests(units, tgts)
+    cells = [(r.kernel, bucket_of(r.scenario), r.target.name) for r in reqs]
+    assert len(cells) == len(set(cells)) == 6      # 3 buckets × 2 targets
+    assert cells[0] == ("rmsnorm", DEFAULT_BUCKET, "tpu-tsass-v1")
+    # no targets: one request per (kernel, bucket) at the session default
+    assert len(campaign_requests(units)) == 3
+    with pytest.raises(KeyError, match="registered targets"):
+        parse_targets("tpu-tsass-v1,definitely-not-a-target")
+
+
+def test_campaign_two_scenarios_two_targets_distinct_and_resumable(
+        tmp_path, stall_db):
+    session = _tiny_session(tmp_path, stall_db)
+    scens = parse_scenarios("8x4096,64x32768xbf16xhalf")
+    tgts = parse_targets("tpu-tsass-v1,tpu-tsass-v2")
+    reqs = campaign_requests([("rmsnorm", s) for s in scens], tgts)
+    results = session.optimize_many(reqs, max_workers=2)
+    assert len(results) == 4
+    assert not any(r.from_cache for r in results)
+    assert {(r.scenario, r.target) for r in results} == \
+        {(s.bucket, t.name) for s in scens for t in tgts}
+    # each target partition holds its own per-bucket index entries
+    for t in tgts:
+        idx = cache.load_index(str(tmp_path / "cache"), t.name, "rmsnorm")
+        scen_map = cache.index_scenarios(idx)
+        assert sorted(scen_map) == sorted(s.bucket for s in scens)
+        assert scen_map[scens[0].bucket]["config"] != \
+            scen_map[scens[1].bucket]["config"] or \
+            scen_map[scens[0].bucket]["key"] != \
+            scen_map[scens[1].bucket]["key"]
+    # re-running the identical campaign resumes: every cell a cache hit
+    again = session.optimize_many(campaign_requests(
+        [("rmsnorm", s) for s in scens], tgts))
+    assert all(r.from_cache for r in again)
+    # ... including from a cold session (index-driven, not in-memory)
+    cold = _tiny_session(tmp_path, stall_db)
+    third = cold.optimize_many(campaign_requests(
+        [("rmsnorm", s) for s in scens], tgts))
+    assert all(r.from_cache for r in third)
+
+
+def test_deploy_and_schedule_plan_dispatch_zero_measurements(
+        tmp_path, stall_db, monkeypatch):
+    """The acceptance criterion: serve-time dispatch resolves request
+    shapes to the nearest tuned bucket as a pure index lookup — zero
+    autotune, zero Machine.run/time."""
+    session = _tiny_session(tmp_path, stall_db)
+    scens = parse_scenarios("8x4096,64x32768xbf16xhalf")
+    session.optimize_many(campaign_requests([("rmsnorm", s) for s in scens]))
+
+    calls = {"run": 0, "time": 0, "autotune": 0}
+    real_run, real_time = Machine.run, Machine.time
+    import sys
+    autotune_mod = sys.modules["repro.sched.autotune"]
+
+    def counting(name, fn):
+        def wrapper(*a, **kw):
+            calls[name] += 1
+            return fn(*a, **kw)
+        return wrapper
+
+    monkeypatch.setattr(Machine, "run", counting("run", real_run))
+    monkeypatch.setattr(Machine, "time", counting("time", real_time))
+    monkeypatch.setattr(autotune_mod, "autotune",
+                        counting("autotune", autotune_mod.autotune))
+
+    # fresh session + fresh cache: everything below is index reads only
+    fresh = _tiny_session(tmp_path, stall_db)
+    near = Scenario(batch=12, seq_len=4096)          # not an exact bucket
+    art = fresh.deploy("rmsnorm", scenario=near)
+    assert art.scenario == scens[0].bucket           # nearest tuned bucket
+    far = Scenario(batch=100, seq_len=32768, occupancy="half")
+    assert fresh.deploy("rmsnorm", scenario=far).scenario == scens[1].bucket
+
+    sc = ScheduleCache(str(tmp_path / "cache"))
+    plan = schedule_plan([("rmsnorm", near), ("rmsnorm", scens[1]),
+                          "softmax"], cache=sc)
+    assert plan[("rmsnorm", near.bucket)].scenario == scens[0].bucket
+    assert plan[("rmsnorm", scens[1].bucket)].scenario == scens[1].bucket
+    assert plan["softmax"] is None                   # never optimized: -O3
+    assert calls == {"run": 0, "time": 0, "autotune": 0}
+
+
+# ---------------------------------------------------------------------------
+# memo merge-on-save (concurrent --memo-dir campaigns)
+# ---------------------------------------------------------------------------
+
+def test_memo_merge_on_save_unions_concurrent_writers(tmp_path):
+    path = str(tmp_path / "memo.pkl")
+    a, b = SharedMeasureMemo(), SharedMeasureMemo()
+    va = a.view([], owner="ka")
+    vb = b.view([], owner="kb")
+    va[b"shared"] = 1.0
+    va[b"only-a"] = 2.0
+    vb[b"shared"] = 1.0          # bit-exact duplicate (same measurement)
+    vb[b"only-b"] = 3.0
+    assert a.save(path) == 2
+    # b saves last but does NOT clobber a's entries: the on-disk file is
+    # folded in under the atomic rename
+    assert b.save(path) == 3
+    merged = SharedMeasureMemo()
+    assert merged.load(path) == 3
+    mv = merged.view([], owner="kc")
+    assert mv.get(b"only-a") == 2.0
+    assert mv.get(b"only-b") == 3.0
+    assert mv.get(b"shared") == 1.0
+    # merge=False restores pure last-writer-wins for tools that want it
+    assert a.save(path, merge=False) == 2
+    fresh = SharedMeasureMemo()
+    fresh.load(path)
+    assert fresh.view([], owner="k").get(b"only-b") is None

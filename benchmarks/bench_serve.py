@@ -1,0 +1,112 @@
+"""Serve-engine load benchmark: latency/throughput vs offered QPS.
+
+Replays the same seeded Poisson trace (mixed prompt/output lengths, two
+weighted tenants) against the continuous-batching ``ServeEngine`` and
+against the same engine degraded to static gang batching, at each offered
+QPS — with and without an RL-optimized schedule plan resolved from a
+freshly tuned cache (nearest-bucket index lookups; the plan axis records
+the fleet's mean kernel speedup and the modeled tokens/s it implies,
+since the simulated machine is not in the CPU serve loop).
+
+Reported per row: delivered tokens/s, p50/p99 end-to-end latency, p50
+TTFT, stall/preemption counts.  The suite asserts the continuous-batching
+acceptance criterion: at the saturating QPS point, continuous admission
+beats gang admission on delivered tokens/s.  In the CI ``--fast`` smoke
+set, so the numbers land in ``BENCH_ci.json`` every run.
+"""
+
+import tempfile
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import build_stall_table
+from repro.models import lm
+from repro.sched import OptimizationSession, make_budgeted_strategy
+from repro.sched.session import OptimizeRequest
+from repro.serve import ServeEngine, Tenant, TrafficConfig, run_load
+
+ARCH = "qwen1.5-4b"
+QPS_SWEEP = (4.0, 256.0)         # trickle vs saturating offered load
+N_REQUESTS = 24
+MAX_BATCH = 4
+MAX_SEQ = 48
+PLAN_KERNELS = ("rmsnorm", "softmax")
+
+
+def _build_plan_cache(timesteps: int) -> str:
+    """Tune a small kernel fleet into a throwaway cache dir (greedy
+    budgeted strategy — the bench measures serving, not search)."""
+    cache_dir = tempfile.mkdtemp(prefix="bench_serve_cache_")
+    session = OptimizationSession(
+        stall_db=build_stall_table(), cache_dir=cache_dir,
+        strategy=make_budgeted_strategy("greedy", timesteps=timesteps,
+                                        episode_length=8))
+    session.optimize_many([OptimizeRequest(kernel=k, force=True)
+                           for k in PLAN_KERNELS], max_workers=2)
+    return cache_dir
+
+
+def _mean_plan_speedup(engine) -> float:
+    arts = [a for a in engine.plan.values() if a is not None]
+    if not arts:
+        return 1.0
+    return sum(a.speedup for a in arts) / len(arts)
+
+
+def run(timesteps: int = 48):
+    cfg = get_config(ARCH, reduced=True)
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    tenants = lambda: [Tenant("t0", weight=3.0), Tenant("t1", weight=1.0)]
+    plan_cache = _build_plan_cache(timesteps)
+
+    rows = []
+    sat = {}      # (admission, plans) -> tokens/s at the saturating QPS
+    for qps in QPS_SWEEP:
+        # Wide output-length mix: the gang baseline holds every lane until
+        # its longest member finishes, which is the waste continuous
+        # admission exists to reclaim.
+        traffic = TrafficConfig(qps=qps, n_requests=N_REQUESTS, n_tenants=2,
+                                prompt_len=(2, 16), output_len=(2, 24),
+                                vocab=cfg.vocab, seed=7)
+        for admission in ("continuous", "gang"):
+            for plans in (False, True):
+                engine = ServeEngine.from_config(
+                    cfg, params=params, max_batch=MAX_BATCH, max_seq=MAX_SEQ,
+                    block_size=8, tenants=tenants(), admission=admission,
+                    schedule_cache=plan_cache if plans else None)
+                report = run_load(engine, traffic)
+                speedup = _mean_plan_speedup(engine) if plans else 1.0
+                eng = report["stats"]["engine"]
+                if qps == max(QPS_SWEEP):
+                    sat[(admission, plans)] = report["tokens_per_s"]
+                rows.append((
+                    "serve_load", ARCH, qps, admission,
+                    "plan" if plans else "baseline", report["n_requests"],
+                    round(report["tokens_per_s"], 2),
+                    round(report["latency_p50_s"] * 1e3, 2),
+                    round(report["latency_p99_s"] * 1e3, 2),
+                    round(report["ttft_p50_s"] * 1e3, 2),
+                    round(speedup, 4),
+                    round(report["tokens_per_s"] * speedup, 2),
+                    eng["stalls"], eng["preemptions"],
+                    round(eng["lane_utilization"], 3)))
+
+    # Acceptance: continuous batching beats static gang batching on
+    # delivered tokens/s once the offered load saturates the engine.
+    for plans in (False, True):
+        cont, gang = sat[("continuous", plans)], sat[("gang", plans)]
+        print(f"# saturation ({'plan' if plans else 'baseline'}): "
+              f"continuous {cont:.1f} tok/s vs gang {gang:.1f} tok/s "
+              f"({cont / gang:.2f}x)")
+        assert cont > gang, (
+            f"continuous batching did not beat static batching at "
+            f"saturation: {cont:.1f} vs {gang:.1f} tok/s (plans={plans})")
+
+    emit(rows, header=("bench", "arch", "qps", "admission", "plans",
+                       "n_requests", "tokens_per_s", "latency_p50_ms",
+                       "latency_p99_ms", "ttft_p50_ms", "plan_speedup",
+                       "modeled_tokens_per_s", "stalls", "preemptions",
+                       "lane_utilization"))
+    return rows

@@ -46,8 +46,8 @@ def main() -> None:
                             bench_kernel_throughput, bench_microbench,
                             bench_moves, bench_pipeline, bench_reward_loop,
                             bench_rl_sensitivity, bench_roofline,
-                            bench_session, bench_stall_resolution,
-                            bench_workload_analysis)
+                            bench_serve, bench_session,
+                            bench_stall_resolution, bench_workload_analysis)
 
     suites = [
         ("table1_microbench", bench_microbench.run),
@@ -66,6 +66,9 @@ def main() -> None:
         # pipeline schedules: gpipe vs 1F1B memory/throughput + overlapped
         # pod reduction (measured rows need the 8-device CI bench env)
         ("pipeline_schedules", bench_pipeline.run),
+        # serve engine under Poisson load: p50/p99 latency + tokens/s vs
+        # QPS, continuous vs gang admission, plans on/off (CPU smoke cell)
+        ("serve_load", bench_serve.run),
     ]
     if not args.fast:
         suites += [

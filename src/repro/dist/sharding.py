@@ -267,3 +267,17 @@ def decode_cache_shardings(cfg, caches, mesh):
         return P(*([None] * len(shape)))
 
     return jax.tree.map(lambda x: NamedSharding(mesh, leaf_spec(x)), caches)
+
+
+def kv_pool_shardings(cfg, caches, mesh):
+    """Placement for the serve engine's slot-pooled KV cache.
+
+    The pool's backing arrays are the decode caches with the slot
+    dimension in the batch position (``max_batch + 1`` rows: the slots
+    plus the scratch row the padded step writes), so they place under
+    exactly the decode-cache rules — slot rows across data axes when
+    divisible, KV heads across the model axis for GQA, sequence for
+    MQA/long-context, latent/conv leaves by their own rules.  Kept as a
+    named entry point so the engine states its placement contract
+    explicitly rather than borrowing a train-path helper."""
+    return decode_cache_shardings(cfg, caches, mesh)

@@ -1,7 +1,15 @@
 """Serving launcher: ``python -m repro.launch.serve --arch gemma3-1b``.
 
-Runs batched greedy generation on the reduced config (CPU) or the full
-config on a cluster mesh.
+The launcher is built around :class:`repro.serve.engine.ServeEngine`:
+it spins up the continuous-batching engine, replays a seeded
+Poisson-arrival trace at ``--qps`` across ``--tenants`` weighted
+tenants, and reports p50/p99 latency, TTFT, tokens/s, the per-tenant
+fairness table, and the resolved ``kernel@bucket [target]`` schedule
+plan (pure cache-index lookups — no autotune at serve time).
+
+The pre-engine invocation (``--batch/--prompt-len/--new-tokens`` without
+``--qps``) still runs the one-shot static-batch :func:`repro.serve.generate`
+path, with a deprecation note pointing at the engine flags.
 """
 
 from __future__ import annotations
@@ -17,21 +25,70 @@ from repro.models import for_config
 from repro.serve import generate
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma3-1b", choices=list(ARCHS))
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--schedule-cache", default=None, metavar="DIR",
-                    help="report the arch's RL-optimized kernel schedules "
-                         "from this cache (index lookup only, no autotune)")
-    args = ap.parse_args()
+def _print_plan(engine) -> None:
+    if not engine.plan:
+        return
+    print("[serve] resolved schedule plan:")
+    for line in engine.plan_summary():
+        print(f"[serve]   {line}")
 
-    cfg = get_config(args.arch, reduced=not args.full)
-    if cfg.family == "encdec":
-        raise SystemExit("use examples/serve_decode.py for the enc-dec arch")
+
+def _print_fairness(engine) -> None:
+    rows = engine.scheduler.fairness_table()
+    cols = ["tenant", "weight", "token_budget", "admitted", "served_tokens",
+            "in_flight_tokens", "queued", "vtime"]
+    widths = {c: max(len(c), *(len(str(r[c])) for r in rows)) for c in cols}
+    print("[serve] tenant fairness:")
+    print("[serve]   " + "  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("[serve]   " + "  ".join(str(r[c]).ljust(widths[c])
+                                       for c in cols))
+
+
+def _engine_mode(args, cfg) -> None:
+    from repro.serve import ServeEngine, Tenant, TrafficConfig, run_load
+
+    weights = ([float(w) for w in args.tenant_weights.split(",")]
+               if args.tenant_weights else [1.0] * args.tenants)
+    if len(weights) != args.tenants:
+        raise SystemExit(f"--tenant-weights needs {args.tenants} values")
+    tenants = [Tenant(f"t{i}", weight=w) for i, w in enumerate(weights)]
+
+    model = for_config(cfg)
+    params = model.init_model(cfg, jax.random.PRNGKey(0))
+    max_seq = args.max_seq or (args.prompt_len + args.new_tokens + 8)
+    engine = ServeEngine.from_config(
+        cfg, params=params, max_batch=args.max_batch, max_seq=max_seq,
+        block_size=args.block_size, kv_blocks=args.kv_blocks,
+        tenants=tenants, schedule_cache=args.schedule_cache)
+    _print_plan(engine)
+
+    traffic = TrafficConfig(
+        qps=args.qps, n_requests=args.requests, n_tenants=args.tenants,
+        prompt_len=(max(2, args.prompt_len // 2), args.prompt_len),
+        output_len=(max(1, args.new_tokens // 2), args.new_tokens),
+        vocab=cfg.vocab, seed=0)
+    print(f"[serve] {args.arch}: {args.requests} requests @ {args.qps} qps, "
+          f"{args.tenants} tenants, max_batch={args.max_batch}, "
+          f"max_seq={max_seq}, kv_blocks={engine.pool.num_blocks}")
+    report = run_load(engine, traffic)
+    print(f"[serve] tokens/s {report['tokens_per_s']:.1f}  "
+          f"p50 {report['latency_p50_s'] * 1e3:.1f}ms  "
+          f"p99 {report['latency_p99_s'] * 1e3:.1f}ms  "
+          f"ttft p50 {report['ttft_p50_s'] * 1e3:.1f}ms  "
+          f"completed {report['completed']}/{report['n_requests']} "
+          f"(truncated {report['truncated']})")
+    eng = report["stats"]["engine"]
+    print(f"[serve] engine: {eng['passes']} passes, lane utilization "
+          f"{eng['lane_utilization']:.2f}, {eng['stalls']} stalls, "
+          f"{eng['preemptions']} preemptions")
+    _print_fairness(engine)
+
+
+def _legacy_mode(args, cfg) -> None:
+    print("[serve] note: the flat --batch static path is deprecated; use "
+          "--qps/--tenants/--max-batch/--kv-blocks to run the "
+          "continuous-batching engine (ServeEngine.from_config)")
     if args.schedule_cache:
         from repro.launch.specs import kernel_fleet
         from repro.serve.engine import schedule_plan
@@ -56,6 +113,48 @@ def main() -> None:
     print(f"[serve] {args.arch}: generated {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s incl. compile)")
     print("[serve] sample:", np.asarray(out[0, :24]).tolist())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b", choices=list(ARCHS))
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--schedule-cache", default=None, metavar="DIR",
+                    help="resolve the arch's RL-optimized kernel schedules "
+                         "from this cache (index lookup only, no autotune)")
+    # engine mode
+    ap.add_argument("--qps", type=float, default=None,
+                    help="offered Poisson arrival rate; enables the "
+                         "continuous-batching engine")
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="number of weighted-fair tenants")
+    ap.add_argument("--tenant-weights", default=None, metavar="W1,W2,...",
+                    help="per-tenant WFQ weights (default: all 1.0)")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="engine slots (concurrent requests per pass)")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="KV pool blocks; below slots*blocks_per_slot "
+                         "oversubscribes the pool (stall/preempt pressure)")
+    ap.add_argument("--max-seq", type=int, default=None,
+                    help="cache positions per slot")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV pool block granularity (tokens)")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="trace length for the load generator")
+    # shared with legacy static mode
+    ap.add_argument("--batch", type=int, default=4,
+                    help="[deprecated static path] batch rows")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=not args.full)
+    if cfg.family == "encdec":
+        raise SystemExit("use examples/serve_decode.py for the enc-dec arch")
+    if args.qps is not None:
+        _engine_mode(args, cfg)
+    else:
+        _legacy_mode(args, cfg)
 
 
 if __name__ == "__main__":

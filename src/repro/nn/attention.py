@@ -146,9 +146,17 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 
 def update_cache(cache: jax.Array, new: jax.Array, pos) -> jax.Array:
-    """Write ``new`` (B, 1, KH, D) into (B, S, KH, D) at ``pos`` via
-    dynamic_update_slice (touches O(slice) bytes, not O(cache))."""
+    """Write ``new`` (B, 1, KH, D) into (B, S, KH, D) at ``pos``.
+
+    ``pos`` may be a scalar (every batch row writes the same position —
+    the static-batch generate path, via dynamic_update_slice touching
+    O(slice) bytes) or a ``(B,)`` vector (each row writes its own
+    position — the continuous-batching ragged decode path, via a
+    per-row scatter)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim >= 1:
+        rows = jnp.arange(cache.shape[0])
+        return cache.at[rows, pos].set(new[:, 0].astype(cache.dtype))
     zero = jnp.zeros((), jnp.int32)
     return jax.lax.dynamic_update_slice(
-        cache, new.astype(cache.dtype),
-        (zero, jnp.asarray(pos, jnp.int32), zero, zero))
+        cache, new.astype(cache.dtype), (zero, pos, zero, zero))

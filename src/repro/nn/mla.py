@@ -103,20 +103,33 @@ def init_mla_cache(cfg: MLAConfig, batch: int, max_seq: int,
 def apply_mla_decode(p: Dict, x: jax.Array, cache: Dict, pos,
                      cfg: MLAConfig) -> Tuple[jax.Array, Dict]:
     """One-token step against the latent cache (weight-absorbed form:
-    scores and values both live in the kv_lora latent space)."""
+    scores and values both live in the kv_lora latent space).
+
+    ``pos`` is a scalar (all rows at the same position) or a ``(B,)``
+    vector of per-row positions (continuous-batching ragged decode)."""
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos)
-    c_new, kr_new = _latent(p, x, cfg, positions)
-    zero = jnp.zeros((), jnp.int32)
     pos32 = jnp.asarray(pos, jnp.int32)
-    cache = {
-        "c_kv": jax.lax.dynamic_update_slice(
-            cache["c_kv"], c_new.astype(cache["c_kv"].dtype),
-            (zero, pos32, zero)),
-        "k_rope": jax.lax.dynamic_update_slice(
-            cache["k_rope"], kr_new.astype(cache["k_rope"].dtype),
-            (zero, pos32, zero)),
-    }
+    ragged = pos32.ndim >= 1
+    positions = pos32[:, None] if ragged else jnp.full((B, 1), pos)
+    c_new, kr_new = _latent(p, x, cfg, positions)
+    if ragged:
+        rows = jnp.arange(B)
+        cache = {
+            "c_kv": cache["c_kv"].at[rows, pos32].set(
+                c_new[:, 0].astype(cache["c_kv"].dtype)),
+            "k_rope": cache["k_rope"].at[rows, pos32].set(
+                kr_new[:, 0].astype(cache["k_rope"].dtype)),
+        }
+    else:
+        zero = jnp.zeros((), jnp.int32)
+        cache = {
+            "c_kv": jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_new.astype(cache["c_kv"].dtype),
+                (zero, pos32, zero)),
+            "k_rope": jax.lax.dynamic_update_slice(
+                cache["k_rope"], kr_new.astype(cache["k_rope"].dtype),
+                (zero, pos32, zero)),
+        }
     q_nope, q_rope = _queries(p, x, cfg, positions)   # (B,1,H,*)
     # absorb W_uk into the query: q_lat (B,1,H,R)
     q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
@@ -127,7 +140,11 @@ def apply_mla_decode(p: Dict, x: jax.Array, cache: Dict, pos,
                         cache["k_rope"].astype(jnp.float32))
     s = (s_lat + s_rope) * (cfg.qk_dim ** -0.5)
     k_pos = jnp.arange(cache["c_kv"].shape[1])
-    s = jnp.where((k_pos <= pos)[None, None, None], s, -1e30)
+    if ragged:
+        mask = (k_pos[None] <= positions)[:, None, None, :]   # (B,1,1,S)
+    else:
+        mask = (k_pos <= pos)[None, None, None]
+    s = jnp.where(mask, s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhqs,bsr->bqhr", w,
                        cache["c_kv"].astype(jnp.float32))   # latent values

@@ -2,28 +2,27 @@
 analogue (paper §4.1 Listing 4, §4.2 Listing 5).
 
 .. deprecated::
-    ``CuAsmRL`` is now a thin shim over the session API
-    (:mod:`repro.sched.session`); new code should write
+    ``CuAsmRL`` **is** an :class:`OptimizationSession` now — a
+    ``DeprecationWarning``-emitting alias that pins one kernel and keeps
+    the legacy ``optimize(force=...)`` / ``deploy(load_dir=...)``
+    call shapes working.  New code should write
 
         session = OptimizationSession()
         res = session.optimize(OptimizeRequest(kernel="matmul_leakyrelu"))
         art = session.deploy("matmul_leakyrelu")
 
-    The shim keeps every existing caller working unchanged — including the
-    deploy-time fix: ``deploy()`` resolves the chosen config through the
-    cache index instead of re-running autotune (it only falls back to the
-    legacy grid-search lookup for pre-index v1 cache directories).
+    Every session capability (``optimize_many``, scenario/target axes,
+    pluggable backends) is available on the alias directly.
 """
 
 from __future__ import annotations
 
 import warnings
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Union
 
 from repro.core.game import GameResult
 from repro.core.machine import Machine
 from repro.core.ppo import PPOConfig
-from repro.sched import autotune as autotune_mod
 from repro.sched import cache
 from repro.sched.backends import FastTimingBackend
 from repro.sched.cache import TARGET, ScheduleCache
@@ -33,8 +32,8 @@ from repro.sched.session import (KernelDef, OptimizationSession,
 __all__ = ["CuAsmRL", "KernelDef", "TARGET"]
 
 
-class CuAsmRL:
-    """One-kernel wrapper over :class:`OptimizationSession` (deprecated)."""
+class CuAsmRL(OptimizationSession):
+    """Deprecated one-kernel alias of :class:`OptimizationSession`."""
 
     def __init__(self, kdef: KernelDef,
                  ppo: Optional[PPOConfig] = None,
@@ -47,28 +46,33 @@ class CuAsmRL:
             "CuAsmRL is deprecated; use OptimizationSession.optimize("
             "OptimizeRequest(kernel=...)) — see repro.sched.session",
             DeprecationWarning, stacklevel=2)
-        self.kdef = kdef
-        self.ppo = ppo or PPOConfig()
-        self.cache_dir = cache_dir
-        self.target = target
-        self.machine_factory = machine_factory
-        self.verify_seeds = verify_seeds
-        self.session = OptimizationSession(
+        super().__init__(
             backend=FastTimingBackend(machine_factory=machine_factory),
             cache_dir=cache_dir, target=target, stall_db=stall_db,
             verify_seeds=verify_seeds)
+        self.kdef = kdef
+        self.ppo = ppo or PPOConfig()
+        self.cache_dir = cache_dir
+        self.machine_factory = machine_factory
         self.last_game: Optional[GameResult] = None
 
     @property
     def stall_db(self) -> Dict[str, int]:
         # Table 1: built once per target by dependency microbenchmarking
-        return self.session.stall_table()
+        return self.stall_table()
 
     # ---- §4.2 Listing 5: invoke optimization --------------------------------
 
-    def optimize(self, force: bool = False, verbose: bool = False
-                 ) -> cache.Artifact:
-        res = self.session.optimize(OptimizeRequest(
+    def optimize(self, request=None, *, force: bool = False,
+                 verbose: bool = False):
+        """Legacy ``optimize(force=..., verbose=...)`` on the pinned
+        kernel, returning the bare :class:`~repro.sched.cache.Artifact`.
+        A session-style request argument goes straight to
+        :meth:`OptimizationSession.optimize` and returns its
+        ``OptimizeResult``."""
+        if request is not None:
+            return super().optimize(request)
+        res = super().optimize(OptimizeRequest(
             kernel=self.kdef, ppo=self.ppo, force=force, verbose=verbose))
         if res.game is not None:
             self.last_game = res.game
@@ -76,20 +80,28 @@ class CuAsmRL:
 
     # ---- §4.2 Listing 5: deployment lookup ------------------------------------
 
-    def deploy(self, load_dir: Optional[str] = None) -> cache.Artifact:
-        sc = (self.session.cache if load_dir is None
+    def deploy(self, load_dir: Optional[str] = None, **kwargs):
+        """Legacy ``deploy(load_dir=...)`` on the pinned kernel — a pure
+        cache-index lookup (v1 single-artifact directories resolve
+        through :class:`ScheduleCache` itself).  Passing a kernel
+        name/def (session-style) forwards to
+        :meth:`OptimizationSession.deploy`."""
+        if isinstance(load_dir, (KernelDef,)) or kwargs or (
+                isinstance(load_dir, str) and not _looks_like_path(load_dir)):
+            return super().deploy(load_dir, **kwargs)
+        sc = (self.cache if load_dir is None
               else ScheduleCache(load_dir, self.target))
         art = sc.lookup_best(self.kdef.name)
-        if art is None:
-            # pre-index (v1) cache directory: recover the chosen config the
-            # way the legacy class did — by re-running the autotune grid
-            tune = autotune_mod.autotune(self.kdef.make_spec,
-                                         self.kdef.configs,
-                                         self.machine_factory())
-            art = cache.load(self.kdef.name, self.target, tune.best.config,
-                             load_dir or self.cache_dir)
         if art is None:
             raise FileNotFoundError(
                 f"no cached schedule for {self.kdef.name}; run optimize() "
                 f"offline first (the paper's search/deploy split)")
         return art
+
+
+def _looks_like_path(s: str) -> bool:
+    """Disambiguate legacy ``deploy(load_dir)`` from session-style
+    ``deploy(kernel_name)``: cache dirs carry path separators or exist on
+    disk; registry names never do."""
+    import os
+    return os.sep in s or "/" in s or os.path.isdir(s)

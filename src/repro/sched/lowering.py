@@ -396,3 +396,37 @@ def resolve_schedule(cache, kernel: str, scenario=None, target=None):
     if scenario is None:
         return cache.lookup_best(kernel, target=target)
     return cache.dispatch(kernel, scenario, target=target)
+
+
+def schedule_plan(kernel_names, cache_dir=None, target=None, cache=None,
+                  scenario=None):
+    """Deploy-time schedule lookup for a serve engine's kernel fleet —
+    the fleet-shaped wrapper over :func:`resolve_schedule` (and what
+    ``repro.serve.engine.schedule_plan`` re-exports).
+
+    ``kernel_names`` takes bare registry names (legacy: keys are the
+    names, resolved at ``scenario`` — the engine's current traffic point,
+    or the default bucket when ``None``) and/or the ``(kernel, scenario)``
+    pairs :func:`repro.launch.specs.kernel_fleet` yields (keys are
+    ``(name, bucket)``, one resolution per workload the model serves).
+
+    Every resolution is a nearest-tuned-bucket pure index lookup — **no**
+    autotune and no machine execution at serve time (the paper's §4.2
+    search/deploy split).  ``None`` marks a kernel that was never
+    optimized (it serves the -O3 baseline).  An unreadable or
+    unknown-version cache raises loudly rather than silently degrading a
+    production rollout.
+    """
+    from repro.sched.cache import DEFAULT_CACHE_DIR, TARGET, ScheduleCache
+    if cache is None:
+        cache = ScheduleCache(cache_dir or DEFAULT_CACHE_DIR,
+                              target or TARGET)
+    plan = {}
+    for item in kernel_names:
+        if isinstance(item, str):
+            plan[item] = resolve_schedule(cache, item, scenario)
+        else:
+            name, scen = item
+            key = (name, scen.bucket if scen is not None else "default")
+            plan[key] = resolve_schedule(cache, name, scen)
+    return plan

@@ -85,9 +85,19 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int) -> List:
 # per-layer decode attention
 # ---------------------------------------------------------------------------
 
+def _positions(pos, batch: int) -> jax.Array:
+    """(B, 1) rope positions from a scalar or per-row ``(B,)`` pos."""
+    pos = jnp.asarray(pos, jnp.int32)
+    return pos[:, None] if pos.ndim >= 1 else jnp.full((batch, 1), pos)
+
+
 def _attn_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
                  pos, window: int) -> Tuple[jax.Array, Dict]:
-    """x: (B, 1, d); ring buffer for local windows, absolute cache else."""
+    """x: (B, 1, d); ring buffer for local windows, absolute cache else.
+
+    ``pos`` is a scalar (all rows at the same position — static batch)
+    or a ``(B,)`` vector (ragged rows — continuous batching), in which
+    case the key mask becomes per-row ``(B, S)``."""
     from repro.nn.core import apply_dense
     B = x.shape[0]
     q = apply_dense(p["wq"], x).reshape(B, 1, cfg.n_heads, cfg.head_dim)
@@ -96,10 +106,11 @@ def _attn_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
     if cfg.qk_norm:
         q = nn.apply_rmsnorm(p["q_norm"], q)
         k = nn.apply_rmsnorm(p["k_norm"], k)
-    positions = jnp.full((B, 1), pos)
+    positions = _positions(pos, B)
     q = nn.apply_rope(q, positions, cfg.rope_theta)
     k = nn.apply_rope(k, positions, cfg.rope_theta)
 
+    ragged = jnp.asarray(pos).ndim >= 1
     S = cache["k"].shape[1]
     ring = window < NO_WINDOW and S <= window
     if ring:
@@ -107,13 +118,21 @@ def _attn_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
                                   axis=1)
         v_cache = jnp.concatenate([cache["v"][:, 1:], v.astype(cache["v"].dtype)],
                                   axis=1)
-        k_positions = pos - (S - 1) + jnp.arange(S)
+        if ragged:
+            k_positions = positions - (S - 1) + jnp.arange(S)[None]  # (B,S)
+        else:
+            k_positions = pos - (S - 1) + jnp.arange(S)
         mask = k_positions >= 0
     else:
         k_cache = nn.update_cache(cache["k"], k, pos)
         v_cache = nn.update_cache(cache["v"], v, pos)
-        k_positions = jnp.arange(S)
-        mask = (k_positions <= pos) & (k_positions > pos - window)
+        if ragged:
+            k_positions = jnp.arange(S)[None]                        # (B,S)
+            mask = (k_positions <= positions) & \
+                   (k_positions > positions - window)
+        else:
+            k_positions = jnp.arange(S)
+            mask = (k_positions <= pos) & (k_positions > pos - window)
 
     o = _masked_decode_attn(q, k_cache, v_cache, mask)
     out = nn.out_project(p, o)
@@ -123,13 +142,16 @@ def _attn_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
 
 
 def _masked_decode_attn(q, k_cache, v_cache, mask):
+    """mask: (S,) shared across rows, or (B, S) per-row (ragged pos)."""
     B, _, H, D = q.shape
     S, KH = k_cache.shape[1], k_cache.shape[2]
     G = H // KH
     qf = q.astype(jnp.float32) * (D ** -0.5)
     logits = jnp.einsum("bqhgd,bshd->bhgqs", qf.reshape(B, 1, KH, G, D),
                         k_cache.astype(jnp.float32))
-    logits = jnp.where(mask[None, None, None, None], logits, _NEG)
+    maskb = (mask[None, None, None, None] if mask.ndim == 1
+             else mask[:, None, None, None, :])
+    logits = jnp.where(maskb, logits, _NEG)
     m = logits.max(axis=-1, keepdims=True)
     p = jnp.exp(logits - m)
     ell = p.sum(axis=-1, keepdims=True)
@@ -145,7 +167,13 @@ def decode_step(params: Dict, caches: List, token: jax.Array, pos,
                 cfg: ModelConfig, mesh=None,
                 enc_out: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, List]:
-    """token (B, 1) int32 -> logits (B, vocab); updates caches."""
+    """token (B, 1) int32 -> logits (B, vocab); updates caches.
+
+    ``pos`` is a scalar (all rows decode the same position — the static
+    generate path) or a ``(B,)`` int vector of per-row positions (the
+    continuous-batching ragged path; each row reads/writes its own cache
+    position).  SSM/recurrent layers carry no position and advance one
+    step per call either way."""
     x = nn.apply_embedding(params["embed"], token).astype(jnp.dtype(cfg.dtype))
     if cfg.name.startswith("gemma"):
         x = x * (cfg.d_model ** 0.5)   # gemma scales embeddings (as forward)

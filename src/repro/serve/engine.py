@@ -1,67 +1,380 @@
-"""Batched serving driver: greedy generation over the decode step.
+"""Serve engine: continuous batching over a slot-pooled KV cache.
 
-The prompt is teacher-forced through the same decode path (correct and
-simple — production prefill lives in the forward pass; see launch/specs.py
-prefill cells), then continuation tokens are sampled greedily.  The whole
-token loop is one lax.scan, so serving compiles to a single program.
+:class:`ServeEngine` is the production serving path.  It owns
+``max_batch`` cache rows (*slots*) plus one scratch row, a
+:class:`~repro.serve.pool.KVBlockPool` accounting for the cache
+positions those rows hold, and a
+:class:`~repro.serve.scheduler.FairScheduler` deciding which tenant's
+request gets the next free slot.  Every engine step:
+
+1. **evict** — finished slots release their pool blocks and stamp
+   latency/TTFT on their :class:`~repro.serve.scheduler.Request`;
+2. **admit** — the fair scheduler fills freed slots (chunked prefill:
+   new prompts are teacher-forced through the same decode step, so
+   admission needs no separate prefill kernel and a long prompt never
+   blocks the running decodes);
+3. **advance** — every live slot that the pool can grow moves one
+   position through ONE fixed-shape jitted decode pass (slots gather
+   their cache rows, step at per-row positions, scatter back; idle
+   lanes pad onto the scratch row, so the step compiles exactly once);
+4. **preempt** — if nothing could advance (pool exhausted), the
+   youngest request is returned to its tenant queue with its generated
+   tokens as teacher-forced resume state (recompute preemption).
+
+Kernel schedules come from the cache index via
+:func:`repro.sched.lowering.schedule_plan` (re-exported here) —
+nearest-bucket pure lookups at construction time, **zero**
+autotune/``Machine.run`` on the serve path.
+
+The module-level :func:`generate` stays as the one-shot, jit-able
+static-batch convenience wrapper (one ``lax.scan`` over the same
+``decode_step``); ``ServeEngine.generate`` is its engine-backed
+equivalent.  Under greedy decoding the two are bit-exact per request
+for batch-independent (non-MoE-capacity) configs — see
+``tests/test_serve_engine.py``.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Iterable, Optional, Tuple, Union
+import dataclasses
+import json
+import time
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.dist import sharding as shd
-from repro.sched.cache import (DEFAULT_CACHE_DIR, TARGET, Artifact,
-                               ScheduleCache)
-from repro.sched.lowering import resolve_schedule
-from repro.sched.scenario import MachineTarget, Scenario
+from repro.sched.cache import ScheduleCache
+from repro.sched.lowering import schedule_plan  # noqa: F401  (serve-facing API)
+from repro.serve.batching import SlotState, assemble
 from repro.serve.decode import decode_step, init_caches
+from repro.serve.pool import KVBlockPool, PoolCapacityError, PoolError  # noqa: F401
+from repro.serve.scheduler import (DEFAULT_TENANT, FairScheduler, Request,
+                                   Tenant)
 
-FleetItem = Union[str, Tuple[str, Optional[Scenario]]]
+# One compiled (step, reset) pair per (config, mesh): engines in a sweep
+# share tracing/compilation instead of re-jitting per instance.
+_STEP_FNS: Dict = {}
 
 
-def schedule_plan(kernel_names: Iterable[FleetItem],
-                  cache_dir: str = DEFAULT_CACHE_DIR,
-                  target: Union[str, MachineTarget] = TARGET,
-                  cache: Optional[ScheduleCache] = None,
-                  scenario: Optional[Scenario] = None
-                  ) -> Dict[Union[str, Tuple[str, str]], Optional[Artifact]]:
-    """Deploy-time schedule lookup for the engine's kernel fleet.
+def _cfg_key(cfg: ModelConfig) -> str:
+    return json.dumps(dataclasses.asdict(cfg), sort_keys=True, default=str)
 
-    ``kernel_names`` takes bare registry names (legacy: keys are the
-    names, resolved at ``scenario`` — the engine's current traffic point,
-    or the default bucket when ``None``) and/or the ``(kernel, scenario)``
-    pairs :func:`repro.launch.specs.kernel_fleet` yields (keys are
-    ``(name, bucket)``, one resolution per workload the model serves).
 
-    Every resolution goes through the
-    :func:`repro.sched.lowering.resolve_schedule` dispatch shim: nearest
-    tuned scenario bucket, pure index lookup — **no** autotune and no
-    machine execution at serve time (the paper's §4.2 search/deploy
-    split).  ``None`` marks a kernel that was never optimized (it serves
-    the -O3 baseline).  An unreadable/unknown-version cache raises loudly
-    rather than silently degrading a production rollout.
+def _step_fns(cfg: ModelConfig, mesh):
+    key = (_cfg_key(cfg), None if mesh is None else id(mesh))
+    if key not in _STEP_FNS:
+        def step(params, caches, idx, tok, pos):
+            # Gather the advancing rows, step them at their own positions,
+            # scatter back.  Duplicate scratch-lane writes are benign:
+            # identical inputs produce identical rows.
+            rows = jax.tree.map(lambda a: a[idx], caches)
+            logits, new_rows = decode_step(params, rows, tok[:, None], pos,
+                                           cfg, mesh=mesh)
+            caches = jax.tree.map(
+                lambda a, r: a.at[idx].set(r.astype(a.dtype)),
+                caches, new_rows)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+        def reset(caches, idx):
+            # Zero rows for newly admitted requests: attention masks hide
+            # a previous occupant's KV, but SSM/conv recurrent state would
+            # otherwise leak across requests.
+            return jax.tree.map(lambda a: a.at[idx].set(0), caches)
+
+        _STEP_FNS[key] = (jax.jit(step), jax.jit(reset))
+    return _STEP_FNS[key]
+
+
+class ServeEngine:
+    """Continuous-batching multi-tenant serving over ``decode_step``.
+
+    Construct through :meth:`from_config` — the single supported path::
+
+        engine = ServeEngine.from_config(cfg, schedule_cache=cache,
+                                         max_batch=8, max_seq=256)
+        req = engine.submit(prompt_tokens, max_new_tokens=64, tenant="a")
+        engine.run()            # or engine.step() per tick under a loadgen
+        req.output              # generated tokens; req.ttft / req.latency
+
+    ``admission="gang"`` degrades the engine to static batching (admit
+    only into an idle engine, wait for the whole gang to finish) — the
+    baseline ``bench_serve.py`` compares continuous batching against.
     """
-    sc = cache if cache is not None else ScheduleCache(cache_dir, target)
-    plan: Dict[Union[str, Tuple[str, str]], Optional[Artifact]] = {}
-    for item in kernel_names:
-        if isinstance(item, str):
-            plan[item] = resolve_schedule(sc, item, scenario)
+
+    def __init__(self, cfg: ModelConfig, *, params: Optional[Dict] = None,
+                 max_batch: int = 8, max_seq: int = 128,
+                 block_size: int = 16, kv_blocks: Optional[int] = None,
+                 tenants: Optional[Sequence[Tenant]] = None,
+                 starvation_bound: int = 8, prefill_chunk: int = 4,
+                 admission: str = "continuous",
+                 schedule_cache: Optional[Union[ScheduleCache, str]] = None,
+                 mesh=None, rng_seed: int = 0):
+        if cfg.family == "encdec":
+            raise ValueError("ServeEngine serves decoder-only families; "
+                             "use examples/serve_decode.py for enc-dec")
+        if admission not in ("continuous", "gang"):
+            raise ValueError(f"admission must be 'continuous' or 'gang', "
+                             f"got {admission!r}")
+        if max_batch < 1 or prefill_chunk < 0:
+            raise ValueError("need max_batch >= 1 and prefill_chunk >= 0")
+        self.cfg = cfg
+        self.max_batch = int(max_batch)
+        self.max_seq = int(max_seq)
+        self.scratch_slot = self.max_batch          # extra padded cache row
+        self.admission = admission
+        self.prefill_chunk = int(prefill_chunk)
+        self.mesh = mesh
+
+        self.pool = KVBlockPool(self.max_batch, self.max_seq,
+                                block_size=block_size, num_blocks=kv_blocks)
+        self.scheduler = FairScheduler(tenants,
+                                       starvation_bound=starvation_bound)
+
+        if params is None:
+            from repro.models import lm
+            params = lm.init_model(cfg, jax.random.PRNGKey(rng_seed))
+        self.params = params
+        self.caches = init_caches(cfg, self.max_batch + 1, self.max_seq)
+        if mesh is not None:
+            from repro.models import lm
+            self.params = jax.device_put(
+                self.params, shd.param_shardings(lm.model_spec(cfg), mesh))
+            self.caches = jax.device_put(
+                self.caches, shd.kv_pool_shardings(cfg, self.caches, mesh))
+        self._step_fn, self._reset_fn = _step_fns(cfg, mesh)
+
+        if isinstance(schedule_cache, str):
+            schedule_cache = ScheduleCache(schedule_cache)
+        self.schedule_cache = schedule_cache
+        if schedule_cache is not None:
+            # Lazy import: launch.specs imports repro.serve at module load.
+            from repro.launch.specs import kernel_fleet
+            self.plan = schedule_plan(kernel_fleet(cfg), cache=schedule_cache)
         else:
-            name, scen = item
-            key = (name, scen.bucket if scen is not None else "default")
-            plan[key] = resolve_schedule(sc, name, scen)
-    return plan
+            self.plan = {}
+
+        self._active: List[SlotState] = []
+        self.finished: List[Request] = []
+        self.counters = {"engine_steps": 0, "passes": 0, "lane_tokens": 0,
+                         "admissions": 0, "stalls": 0, "preemptions": 0,
+                         "truncations": 0}
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig, **kwargs) -> "ServeEngine":
+        """The one constructor path (see class docstring for the knobs)."""
+        return cls(cfg, **kwargs)
+
+    # -- request intake ------------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               tenant: str = DEFAULT_TENANT) -> Request:
+        """Queue a request.  Raises :class:`PoolCapacityError` immediately
+        when the prompt can never be served (``len(prompt) >= max_seq``
+        leaves no cache position for even one generated token — the old
+        silent out-of-range cache write, now a typed admission error)."""
+        prompt = [int(t) for t in prompt]
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if not self.pool.fits(len(prompt)):
+            raise PoolCapacityError(
+                f"prompt of {len(prompt)} tokens can never be admitted: "
+                f"max_seq={self.max_seq} needs len(prompt) < max_seq so the "
+                f"first generated token has a cache position")
+        req = Request(prompt=prompt, max_new_tokens=int(max_new_tokens),
+                      tenant=tenant)
+        budget = next((t.token_budget for t in self.scheduler.tenants
+                       if t.name == tenant), None)
+        if budget is not None and req.cost > budget:
+            raise ValueError(
+                f"request cost {req.cost} exceeds tenant {tenant!r} token "
+                f"budget {budget}; it could never be admitted")
+        return self.scheduler.submit(req)
+
+    # -- the serve loop ------------------------------------------------------
+
+    def step(self) -> int:
+        """One engine tick: evict, admit, advance, preempt-on-stall.
+        Returns the number of slot advances made.
+
+        Prefill is folded into the decode passes (chunked admission): a
+        tick runs one full-width pass, plus up to ``prefill_chunk`` more
+        while any slot is still teacher-forcing its prompt — every pass
+        advances *all* eligible slots, so prompt catch-up never drops
+        lane occupancy and never stalls the running decodes."""
+        self._evict()
+        self._admit()
+        for s in self._active:
+            s.stalled = False
+        advanced = 0
+        for _ in range(1 + self.prefill_chunk):
+            n = self._pass()
+            advanced += n
+            if n == 0 or not any(s.in_prefill and not s.done
+                                 and not s.stalled for s in self._active):
+                break
+        self._evict()
+        if advanced == 0 and self._active:
+            self._preempt_youngest()
+        self.counters["engine_steps"] += 1
+        return advanced
+
+    def run(self, max_steps: int = 1_000_000) -> List[Request]:
+        """Drain every queued/active request; returns finished requests
+        in completion order."""
+        while self._active or self.scheduler.pending():
+            if max_steps <= 0:
+                raise RuntimeError(
+                    f"serve loop did not drain: {len(self._active)} active, "
+                    f"{self.scheduler.pending()} pending")
+            self.step()
+            max_steps -= 1
+        return list(self.finished)
+
+    def generate(self, prompt: Sequence[int], max_new_tokens: int,
+                 tenant: str = DEFAULT_TENANT) -> List[int]:
+        """One-shot convenience over the engine: submit, drain, return
+        ``prompt + generated`` (the engine-side equivalent of the
+        module-level static-batch :func:`generate`)."""
+        req = self.submit(prompt, max_new_tokens, tenant)
+        self.run()
+        return list(req.prompt) + list(req.output)
+
+    # -- internals -----------------------------------------------------------
+
+    def _admit(self) -> None:
+        if self.admission == "gang" and self._active:
+            return           # static batching: wait for the gang to finish
+        fresh: List[int] = []
+        while len(self._active) < self.max_batch:
+            req = self.scheduler.admit_next(
+                predicate=lambda r: self.pool.can_admit(
+                    len(r.prompt) + len(r.resume_tokens)))
+            if req is None:
+                break
+            table = self.pool.alloc(req.id,
+                                    len(req.prompt) + len(req.resume_tokens))
+            self._active.append(SlotState.admit(table.slot, req))
+            fresh.append(table.slot)
+            self.counters["admissions"] += 1
+        if fresh:
+            idx = np.full((self.max_batch,), self.scratch_slot, np.int32)
+            idx[:len(fresh)] = fresh
+            self.caches = self._reset_fn(self.caches, jnp.asarray(idx))
+
+    def _pass(self) -> int:
+        cand: List[SlotState] = []
+        for s in self._active:
+            if s.done or s.stalled:
+                continue
+            if self.pool.can_ensure(s.request.id, s.needs_tokens()):
+                self.pool.ensure(s.request.id, s.needs_tokens())
+                cand.append(s)
+            else:
+                s.stalled = True
+                self.counters["stalls"] += 1
+        asm = assemble(cand, self.max_batch, self.scratch_slot)
+        if asm is None:
+            return 0
+        idx, tok, pos, stepped = asm
+        nxt, self.caches = self._step_fn(
+            self.params, self.caches, jnp.asarray(idx), jnp.asarray(tok),
+            jnp.asarray(pos))
+        nxt = np.asarray(nxt)
+        now = time.monotonic()
+        for lane, s in enumerate(stepped):
+            appended = s.apply(int(nxt[lane]), self.max_seq)
+            if appended and s.request.first_token_time is None:
+                s.request.first_token_time = now
+            if s.request.truncated:
+                self.counters["truncations"] += 1
+        self.counters["passes"] += 1
+        self.counters["lane_tokens"] += len(stepped)
+        return len(stepped)
+
+    def _evict(self) -> None:
+        done = [s for s in self._active if s.done]
+        if not done:
+            return
+        now = time.monotonic()
+        for s in done:
+            req = s.request
+            req.output = list(s.generated)
+            req.finish_time = now
+            self.scheduler.release(req, served_tokens=s.num_generated)
+            self.pool.free(req.id)
+            self._active.remove(s)
+            self.finished.append(req)
+
+    def _preempt_youngest(self) -> None:
+        victim = max(self._active,
+                     key=lambda s: (s.request.submit_time, s.request.id))
+        req = victim.request
+        self._active.remove(victim)
+        self.pool.free(req.id)
+        generated = list(victim.generated)
+        if len(req.prompt) + len(generated) >= self.max_seq:
+            # Resuming would need the whole cache for teacher-forcing:
+            # finish it truncated rather than starve the queue.
+            req.truncated = True
+            req.output = generated
+            req.finish_time = time.monotonic()
+            self.scheduler.release(req, served_tokens=len(generated))
+            self.finished.append(req)
+            self.counters["truncations"] += 1
+            return
+        req.resume_tokens = generated
+        req.preemptions += 1
+        self.scheduler.release(req, served_tokens=0)
+        self.scheduler.requeue_front(req)
+        self.counters["preemptions"] += 1
+
+    # -- reporting -----------------------------------------------------------
+
+    @property
+    def active(self) -> int:
+        return len(self._active)
+
+    def stats(self) -> Dict[str, object]:
+        c = dict(self.counters)
+        c["lane_utilization"] = (
+            c["lane_tokens"] / (c["passes"] * self.max_batch)
+            if c["passes"] else 0.0)
+        return {"engine": c, "pool": self.pool.stats(),
+                "tenants": self.scheduler.fairness_table()}
+
+    def plan_summary(self) -> List[str]:
+        """``kernel@bucket [target]: state`` lines for the resolved plan."""
+        lines = []
+        for key, art in sorted(self.plan.items(), key=str):
+            name, bucket = key if isinstance(key, tuple) else (key, "default")
+            label = name if bucket == "default" else f"{name}@{bucket}"
+            if art is not None:
+                target = art.target or "-"
+                lines.append(f"{label} [{target}]: {art.speedup:.3f}x "
+                             f"({art.optimized_cycles:.0f} cycles)")
+            else:
+                lines.append(f"{label}: not optimized (-O3 baseline)")
+        return lines
 
 
 def generate(params: Dict, cfg: ModelConfig, prompt: jax.Array,
              max_new_tokens: int, max_seq: Optional[int] = None,
              mesh=None) -> jax.Array:
-    """prompt: (B, P) int32 -> (B, P + max_new_tokens) greedy tokens.
+    """One-shot static-batch convenience: (B, P) int32 prompt ->
+    (B, P + max_new_tokens) greedy tokens in a single jit-able
+    ``lax.scan`` over :func:`repro.serve.decode.decode_step`.
+
+    This is the documented convenience wrapper for "run these B prompts
+    to completion, nothing else going on" — benchmark cells and tests.
+    Anything resembling a service (requests arriving over time, mixed
+    lengths, tenants) belongs on :class:`ServeEngine`, which drives the
+    *same* decode step per-row and matches this function token-for-token
+    under greedy decoding (pass the engine's ``max_seq`` here so cache
+    geometry — and hence float summation order — is identical).
 
     With ``mesh`` given, params and caches are placed by the dist-layer
     rules before the token loop, so the scanned decode step runs sharded

@@ -1,0 +1,229 @@
+"""KV-cache block pool: the serve engine's memory manager.
+
+The engine's physical KV storage is the slot-major dense cache pytree that
+:func:`repro.serve.decode.init_caches` builds (one batch row per *slot*,
+``max_seq`` positions per row — plus one scratch row the batched step pads
+inactive lanes onto).  What continuous batching needs on top is
+*accounting*: which slot a request owns, how many fixed-size **blocks** of
+sequence positions it has been granted, and whether admission or another
+decode step would exceed the pool — so admission control, growth, and
+preemption are all decisions against one free list instead of ad-hoc
+per-request math.
+
+Blocks are ``block_size`` tokens each and come from one global free list
+(``num_blocks`` total).  ``num_blocks`` may be *smaller* than
+``num_slots × blocks_per_slot`` — oversubscription: more concurrent slots
+than worst-case full-length sequences, the standard serving trade.  When a
+decode step would cross into a block the pool cannot grant, the engine
+stalls that slot and, if nothing at all can advance, preempts the youngest
+request (recompute-on-readmission; see ``serve.engine``).
+
+Capacity errors are **typed and loud**: a request whose prompt already
+fills every cache position (``prompt_len >= max_seq`` — no position left
+for even one generated token) raises :class:`PoolCapacityError` at
+admission instead of silently letting ``decode_step`` clamp its cache
+write into the last position (the old out-of-range bug).
+
+Placement of the backing cache arrays onto a device mesh goes through the
+existing dist-layer rules — :func:`repro.dist.sharding.kv_pool_shardings`
+(the slot dimension plays the batch role).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+
+class PoolError(RuntimeError):
+    """Caller bug against the pool protocol (double alloc, double free,
+    unknown request) — deliberately not a capacity signal."""
+
+
+class PoolCapacityError(PoolError):
+    """The request can not be granted the cache positions it needs —
+    either ever (prompt fills the whole cache) or right now (free list
+    exhausted and the caller asked for a hard allocation)."""
+
+
+@dataclasses.dataclass
+class BlockTable:
+    """One request's allocation: its slot plus the granted block ids."""
+    request_id: object
+    slot: int
+    blocks: List[int]
+    tokens: int                       # cache positions covered by `blocks`
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.blocks)
+
+
+class KVBlockPool:
+    """Fixed-size-block free list over the slot-major KV cache.
+
+    ``num_slots`` is the concurrency bound (batch rows), ``max_seq`` the
+    per-slot position capacity, ``block_size`` the grant granularity, and
+    ``num_blocks`` the global token-memory budget (defaults to the
+    un-oversubscribed ``num_slots * ceil(max_seq / block_size)``).
+    """
+
+    def __init__(self, num_slots: int, max_seq: int, block_size: int = 16,
+                 num_blocks: Optional[int] = None):
+        if num_slots < 1 or max_seq < 2 or block_size < 1:
+            raise ValueError(
+                f"need num_slots >= 1, max_seq >= 2, block_size >= 1; got "
+                f"{num_slots}/{max_seq}/{block_size}")
+        self.num_slots = int(num_slots)
+        self.max_seq = int(max_seq)
+        self.block_size = int(block_size)
+        self.blocks_per_slot = math.ceil(self.max_seq / self.block_size)
+        self.num_blocks = (int(num_blocks) if num_blocks is not None
+                           else self.num_slots * self.blocks_per_slot)
+        if self.num_blocks < self.blocks_per_slot:
+            raise ValueError(
+                f"num_blocks={self.num_blocks} cannot hold even one "
+                f"full-length request ({self.blocks_per_slot} blocks)")
+        self._free_slots: List[int] = list(range(self.num_slots))
+        self._free_blocks: List[int] = list(range(self.num_blocks))
+        self._tables: Dict[object, BlockTable] = {}
+        # lifetime stats (bench / fairness table surfacing)
+        self.allocs = 0
+        self.frees = 0
+        self.high_water_blocks = 0
+
+    # -- capacity queries ----------------------------------------------------
+
+    def blocks_for(self, tokens: int) -> int:
+        return max(1, math.ceil(tokens / self.block_size))
+
+    def fits(self, prompt_len: int) -> bool:
+        """Whether a prompt can *ever* be served: it must leave at least
+        one cache position for the first generated token's KV write."""
+        return 1 <= prompt_len < self.max_seq
+
+    @property
+    def free_slot_count(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def free_block_count(self) -> int:
+        return len(self._free_blocks)
+
+    @property
+    def used_block_count(self) -> int:
+        return self.num_blocks - len(self._free_blocks)
+
+    def can_admit(self, prompt_len: int) -> bool:
+        """Admission predicate: a free slot and enough free blocks to
+        cover the prompt (decode growth is granted block-by-block)."""
+        return (self.fits(prompt_len) and self._free_slots
+                and len(self._free_blocks) >= self.blocks_for(prompt_len))
+
+    def can_ensure(self, request_id, tokens: int) -> bool:
+        """Whether ``ensure`` for this coverage would succeed right now."""
+        t = self._tables.get(request_id)
+        if t is None or tokens > self.max_seq:
+            return False
+        need = self.blocks_for(tokens) - t.num_blocks
+        return need <= len(self._free_blocks)
+
+    # -- allocation ----------------------------------------------------------
+
+    def alloc(self, request_id, prompt_len: int) -> BlockTable:
+        """Admit a request: claim a slot and the prompt's blocks.
+
+        Raises :class:`PoolCapacityError` when the prompt can never fit
+        (``prompt_len >= max_seq`` leaves no position for generation) or
+        the free list cannot cover it now; :class:`PoolError` on protocol
+        misuse (already-allocated id, no free slot)."""
+        if request_id in self._tables:
+            raise PoolError(f"request {request_id!r} is already allocated")
+        if not self.fits(prompt_len):
+            raise PoolCapacityError(
+                f"prompt of {prompt_len} tokens cannot be admitted into a "
+                f"{self.max_seq}-position cache: at least one position must "
+                f"remain for the first generated token")
+        if not self._free_slots:
+            raise PoolError("no free slot (call can_admit() before alloc())")
+        need = self.blocks_for(prompt_len)
+        if need > len(self._free_blocks):
+            raise PoolCapacityError(
+                f"pool out of blocks: need {need}, "
+                f"free {len(self._free_blocks)}")
+        slot = self._free_slots.pop(0)
+        blocks = [self._free_blocks.pop(0) for _ in range(need)]
+        table = BlockTable(request_id=request_id, slot=slot, blocks=blocks,
+                           tokens=need * self.block_size)
+        self._tables[request_id] = table
+        self.allocs += 1
+        self.high_water_blocks = max(self.high_water_blocks,
+                                     self.used_block_count)
+        return table
+
+    def ensure(self, request_id, tokens: int) -> BlockTable:
+        """Grow the request's grant to cover ``tokens`` cache positions
+        (a decode step about to write position ``p`` needs ``p + 1``).
+        No-op when already covered."""
+        t = self._tables.get(request_id)
+        if t is None:
+            raise PoolError(f"unknown request {request_id!r}")
+        if tokens > self.max_seq:
+            raise PoolCapacityError(
+                f"request {request_id!r} needs {tokens} positions but the "
+                f"cache holds {self.max_seq}")
+        need = self.blocks_for(tokens) - t.num_blocks
+        if need <= 0:
+            return t
+        if need > len(self._free_blocks):
+            raise PoolCapacityError(
+                f"pool out of blocks growing request {request_id!r}: need "
+                f"{need}, free {len(self._free_blocks)}")
+        t.blocks.extend(self._free_blocks.pop(0) for _ in range(need))
+        t.tokens = t.num_blocks * self.block_size
+        self.high_water_blocks = max(self.high_water_blocks,
+                                     self.used_block_count)
+        return t
+
+    def free(self, request_id) -> int:
+        """Release the request's slot and blocks; returns the block count.
+        A second free of the same id raises (double-free guard)."""
+        t = self._tables.pop(request_id, None)
+        if t is None:
+            raise PoolError(f"double free / unknown request {request_id!r}")
+        self._free_slots.append(t.slot)
+        self._free_slots.sort()
+        self._free_blocks.extend(t.blocks)
+        self.frees += 1
+        return t.num_blocks
+
+    def table(self, request_id) -> BlockTable:
+        try:
+            return self._tables[request_id]
+        except KeyError:
+            raise PoolError(f"unknown request {request_id!r}") from None
+
+    # -- invariants ----------------------------------------------------------
+
+    def check(self) -> None:
+        """Assert the free-list invariants (tests call this after churn):
+        slots and blocks are conserved, never double-granted."""
+        granted = [b for t in self._tables.values() for b in t.blocks]
+        assert len(granted) + len(self._free_blocks) == self.num_blocks, \
+            "block leak/duplication"
+        assert len(set(granted)) == len(granted), "block double-grant"
+        assert not (set(granted) & set(self._free_blocks)), \
+            "block simultaneously granted and free"
+        slots = [t.slot for t in self._tables.values()]
+        assert len(slots) + len(self._free_slots) == self.num_slots, \
+            "slot leak/duplication"
+        assert len(set(slots)) == len(slots), "slot double-grant"
+
+    def stats(self) -> Dict[str, int]:
+        return {"num_slots": self.num_slots, "num_blocks": self.num_blocks,
+                "free_slots": len(self._free_slots),
+                "free_blocks": len(self._free_blocks),
+                "used_blocks": self.used_block_count,
+                "allocs": self.allocs, "frees": self.frees,
+                "high_water_blocks": self.high_water_blocks}

@@ -1,0 +1,376 @@
+"""Continuous-batching serve engine: per-request bit-exactness vs the
+static ``generate()`` path (including under preemption and slot reuse),
+KV block-pool invariants under seeded churn, weighted-fair scheduling
+with starvation/budget guards, the cache-capacity admission boundary,
+and the zero-measurement serve hot path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve import (FairScheduler, KVBlockPool, PoolCapacityError,
+                         PoolError, Request, ServeEngine, Tenant,
+                         TrafficConfig, generate, run_load)
+from repro.serve.decode import decode_step, init_caches
+
+MAX_SEQ = 48
+
+
+def _model(arch):
+    cfg = get_config(arch, reduced=True)
+    return cfg, lm.init_model(cfg, jax.random.PRNGKey(0))
+
+
+def _ref_generation(params, cfg, prompt, n):
+    """One-request-at-a-time reference: the static scanned generate()
+    at the engine's cache geometry (same max_seq -> same summation
+    order), returning just the generated suffix."""
+    out = generate(params, cfg, np.asarray(prompt, np.int32)[None], n,
+                   max_seq=MAX_SEQ)
+    return np.asarray(out)[0, len(prompt):].tolist()
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen1.5-4b", "gemma3-1b", "mamba2-1.3b"])
+def test_continuous_batching_bitexact_vs_sequential_generate(arch):
+    """Acceptance criterion: per-request token streams under continuous
+    batching (staggered arrivals, mixed lengths, slot churn) are
+    bit-exact vs running each request alone through ``generate()``
+    (greedy).  Covers absolute caches (qwen), ring-buffer local windows
+    (gemma), and recurrent SSM state (mamba — exercises the slot-reset
+    path when a freed slot is reused)."""
+    cfg, params = _model(arch)
+    engine = ServeEngine.from_config(cfg, params=params, max_batch=3,
+                                     max_seq=MAX_SEQ, block_size=8,
+                                     prefill_chunk=2)
+    rng = np.random.default_rng(0)
+    jobs = []
+    for _ in range(4):
+        plen, n = int(rng.integers(3, 14)), int(rng.integers(2, 10))
+        jobs.append((rng.integers(0, cfg.vocab, plen,
+                                  dtype=np.int32).tolist(), n))
+    reqs = [engine.submit(p, n) for p, n in jobs[:2]]
+    for _ in range(3):                       # stagger: arrive mid-flight
+        engine.step()
+    reqs += [engine.submit(p, n) for p, n in jobs[2:]]
+    engine.run()
+
+    for req, (prompt, n) in zip(reqs, jobs):
+        assert req.output == _ref_generation(params, cfg, prompt, n), \
+            f"request {req.id} diverged from sequential generate()"
+        assert len(req.output) == n and not req.truncated
+        assert req.ttft is not None and req.latency >= req.ttft
+    assert engine.pool.stats()["free_blocks"] == engine.pool.num_blocks
+    engine.pool.check()
+
+
+def test_preempted_requests_resume_bitexact():
+    """Recompute preemption: with the block pool oversubscribed, stalled
+    requests get requeued with their generated prefix teacher-forced, and
+    still finish bit-exact vs the sequential reference."""
+    cfg, params = _model("qwen1.5-4b")
+    engine = ServeEngine.from_config(cfg, params=params, max_batch=2,
+                                     max_seq=MAX_SEQ, block_size=8,
+                                     kv_blocks=7, prefill_chunk=4)
+    rng = np.random.default_rng(2)
+    jobs = [(rng.integers(0, cfg.vocab, 10, dtype=np.int32).tolist(), 30)
+            for _ in range(3)]
+    reqs = [engine.submit(p, n) for p, n in jobs]
+    engine.run()
+    assert engine.counters["preemptions"] > 0, "pool never pressured"
+    for req, (prompt, n) in zip(reqs, jobs):
+        ref = _ref_generation(params, cfg, prompt, n)
+        if req.truncated:
+            assert req.output == ref[:len(req.output)]
+        else:
+            assert req.output == ref
+    engine.pool.check()
+
+
+def test_gang_admission_is_static_batching():
+    """admission='gang' (the bench baseline) only admits into an idle
+    engine and still produces the exact sequential streams."""
+    cfg, params = _model("qwen1.5-4b")
+    engine = ServeEngine.from_config(cfg, params=params, max_batch=2,
+                                     max_seq=MAX_SEQ, admission="gang")
+    jobs = [([1, 2, 3], 5), ([4, 5, 6, 7], 4), ([8, 9], 6)]
+    reqs = [engine.submit(p, n) for p, n in jobs]
+    saw_full_gang = False
+    while engine.active or engine.scheduler.pending():
+        engine.step()
+        assert engine.active <= 2
+        if engine.active == 2 and engine.scheduler.pending():
+            saw_full_gang = True
+            assert engine.counters["admissions"] == 2  # 3rd waits for gang
+    assert saw_full_gang
+    for req, (prompt, n) in zip(reqs, jobs):
+        assert req.output == _ref_generation(params, cfg, prompt, n)
+
+
+# ---------------------------------------------------------------------------
+# ragged per-row positions in decode_step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen1.5-4b", "deepseek-v2-lite-16b"])
+def test_vector_pos_decode_step_matches_scalar(arch):
+    """A (B,) pos vector with equal entries is bit-identical to the
+    scalar-pos path (attention and MLA latent caches)."""
+    cfg, params = _model(arch)
+    B, steps = 3, 5
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab, (steps, B, 1), dtype=np.int32)
+    c_s = init_caches(cfg, B, MAX_SEQ)
+    c_v = init_caches(cfg, B, MAX_SEQ)
+    for pos in range(steps):
+        t = jnp.asarray(toks[pos])
+        log_s, c_s = decode_step(params, c_s, t, pos, cfg)
+        log_v, c_v = decode_step(params, c_v, t,
+                                 jnp.full((B,), pos, jnp.int32), cfg)
+        np.testing.assert_array_equal(np.asarray(log_s), np.asarray(log_v))
+    for a, b in zip(jax.tree.leaves(c_s), jax.tree.leaves(c_v)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# capacity boundary
+# ---------------------------------------------------------------------------
+
+def test_prompt_at_cache_capacity_raises_pool_capacity_error():
+    """A prompt of exactly ``max_seq`` tokens must raise a typed
+    PoolCapacityError at admission (pool and engine), not silently write
+    out of cache range; ``max_seq - 1`` still admits and generates."""
+    pool = KVBlockPool(num_slots=2, max_seq=16, block_size=4)
+    assert not pool.fits(16) and not pool.fits(17) and pool.fits(15)
+    with pytest.raises(PoolCapacityError):
+        pool.alloc("r1", 16)
+    pool.check()
+
+    cfg, params = _model("qwen1.5-4b")
+    engine = ServeEngine.from_config(cfg, params=params, max_batch=2,
+                                     max_seq=16)
+    with pytest.raises(PoolCapacityError):
+        engine.submit(list(range(16)), 4)
+    req = engine.submit(list(range(15)), 4)      # boundary-1: admissible
+    engine.run()
+    # positions 14 and 15 each emit one token, then a clean truncation —
+    # never a clamped out-of-range cache write
+    assert len(req.output) == 2 and req.truncated
+    engine.pool.check()
+
+
+# ---------------------------------------------------------------------------
+# pool invariants
+# ---------------------------------------------------------------------------
+
+def test_pool_alloc_free_invariants_under_seeded_churn():
+    pool = KVBlockPool(num_slots=4, max_seq=64, block_size=8, num_blocks=20)
+    rng = np.random.default_rng(42)
+    live = {}
+    for i in range(400):
+        if live and (rng.random() < 0.4 or not pool.free_slot_count):
+            rid = rng.choice(list(live))
+            pool.free(rid)
+            del live[rid]
+        else:
+            rid, plen = f"r{i}", int(rng.integers(1, 64))
+            if pool.can_admit(plen):
+                t = pool.alloc(rid, plen)
+                live[rid] = t
+                assert t.tokens >= plen
+        if live and rng.random() < 0.5:
+            rid = rng.choice(list(live))
+            want = int(rng.integers(1, 65))
+            if pool.can_ensure(rid, want):
+                assert pool.ensure(rid, want).tokens >= want
+        pool.check()                      # conservation + no double-grant
+    for rid in list(live):
+        pool.free(rid)
+    pool.check()
+    s = pool.stats()
+    assert s["free_blocks"] == pool.num_blocks      # no leak after churn
+    assert s["free_slots"] == pool.num_slots
+    assert s["allocs"] == s["frees"]
+
+
+def test_pool_double_free_and_protocol_errors():
+    pool = KVBlockPool(num_slots=2, max_seq=32, block_size=8)
+    pool.alloc("a", 10)
+    with pytest.raises(PoolError):
+        pool.alloc("a", 4)               # duplicate allocation
+    pool.free("a")
+    with pytest.raises(PoolError):
+        pool.free("a")                   # double free
+    with pytest.raises(PoolError):
+        pool.ensure("ghost", 8)          # unknown request
+    pool.check()
+
+
+def test_pool_oversubscription_runs_out_of_blocks_not_slots():
+    pool = KVBlockPool(num_slots=4, max_seq=32, block_size=8, num_blocks=5)
+    pool.alloc("a", 24)                  # 3 blocks
+    pool.alloc("b", 16)                  # 2 blocks -> 0 free
+    assert pool.free_slot_count == 2 and not pool.can_admit(1)
+    with pytest.raises(PoolCapacityError):
+        pool.alloc("c", 8)
+    assert not pool.can_ensure("a", 32)
+    with pytest.raises(PoolCapacityError):
+        pool.ensure("a", 32)
+    pool.free("b")
+    assert pool.can_ensure("a", 32)
+    pool.check()
+
+
+# ---------------------------------------------------------------------------
+# fair scheduler
+# ---------------------------------------------------------------------------
+
+def _drain(sched, n):
+    order = []
+    for _ in range(n):
+        req = sched.admit_next()
+        if req is None:
+            break
+        req.finish_time = req.submit_time + 1.0
+        sched.release(req, served_tokens=req.cost)
+        order.append(req.tenant)
+    return order
+
+
+def test_wfq_admission_tracks_weight_ratio():
+    """Tenants with 3:1 weights and equal-cost backlogs get admissions in
+    a 3:1 ratio over any busy window (stride scheduling)."""
+    sched = FairScheduler([Tenant("a", weight=3.0), Tenant("b", weight=1.0)],
+                          starvation_bound=1000)
+    for i in range(40):
+        sched.submit(Request(prompt=[0] * 8, max_new_tokens=8, tenant="a"))
+        sched.submit(Request(prompt=[0] * 8, max_new_tokens=8, tenant="b"))
+    order = _drain(sched, 24)
+    assert order.count("a") == 18 and order.count("b") == 6
+
+
+def test_starvation_bound_caps_low_weight_wait():
+    """Weights bound *rates*, not *waits*: at a 1000:1 effective weight
+    ratio pure WFQ would serve the light tenant once and then pass it
+    over for ~1000 rounds.  The starvation bound instead caps every
+    inter-admission gap at ``bound`` passed-over rounds."""
+    bound = 4
+    sched = FairScheduler([Tenant("heavy", weight=1.0),
+                           Tenant("light", weight=0.001)],
+                          starvation_bound=bound)
+    for _ in range(30):
+        sched.submit(Request(prompt=[0] * 8, max_new_tokens=8,
+                             tenant="heavy"))
+    for _ in range(5):
+        sched.submit(Request(prompt=[0] * 8, max_new_tokens=8,
+                             tenant="light"))
+    order = _drain(sched, 20)
+    light_pos = [i for i, t in enumerate(order) if t == "light"]
+    assert len(light_pos) >= 3, f"light tenant starved: {order}"
+    gaps = [b - a for a, b in zip(light_pos, light_pos[1:])]
+    assert all(g <= bound + 1 for g in gaps), \
+        f"light tenant waited beyond the bound: {order} (gaps {gaps})"
+
+
+def test_token_budget_caps_in_flight_tokens():
+    sched = FairScheduler([Tenant("a", weight=1.0, token_budget=20)])
+    reqs = [sched.submit(Request(prompt=[0] * 6, max_new_tokens=4,
+                                 tenant="a")) for _ in range(3)]
+    assert sched.admit_next() is reqs[0]          # 10 in flight
+    assert sched.admit_next() is reqs[1]          # 20 in flight: at budget
+    assert sched.admit_next() is None             # over budget -> throttled
+    sched.release(reqs[0], served_tokens=4)
+    assert sched.admit_next() is reqs[2]          # budget freed
+    table = {r["tenant"]: r for r in sched.fairness_table()}
+    assert table["a"]["in_flight_tokens"] == 20
+
+
+def test_preemption_requeue_is_not_double_charged():
+    """A preempted request re-admits without advancing its tenant's
+    virtual time again (its footprint was charged at first admission)."""
+    sched = FairScheduler([Tenant("a", weight=1.0)])
+    req = sched.submit(Request(prompt=[0] * 8, max_new_tokens=8, tenant="a"))
+    assert sched.admit_next() is req
+    v1 = sched.fairness_table()[0]["vtime"]
+    sched.release(req)                            # preemption
+    sched.requeue_front(req)
+    assert sched.admit_next() is req
+    assert sched.fairness_table()[0]["vtime"] == v1
+
+
+# ---------------------------------------------------------------------------
+# zero-measurement serve path + load generator
+# ---------------------------------------------------------------------------
+
+def test_serve_hot_path_zero_measurements(tmp_path, stall_db, monkeypatch):
+    """Acceptance criterion: an engine constructed with a schedule cache
+    resolves its whole kernel plan and serves traffic with zero
+    ``Machine.run``/``Machine.time``/autotune calls — schedules reach the
+    serve path as pure index lookups."""
+    import sys
+
+    from repro.core import Machine
+    from repro.sched import OptimizationSession, make_budgeted_strategy
+    from repro.sched.cache import ScheduleCache
+    from repro.sched.session import OptimizeRequest
+
+    session = OptimizationSession(
+        strategy=make_budgeted_strategy("greedy", timesteps=64,
+                                        episode_length=8),
+        cache_dir=str(tmp_path / "cache"), stall_db=stall_db,
+        verify_seeds=2)
+    session.optimize(OptimizeRequest(kernel="rmsnorm"))
+
+    calls = {"run": 0, "time": 0, "autotune": 0}
+    real_run, real_time = Machine.run, Machine.time
+    autotune_mod = sys.modules["repro.sched.autotune"]
+
+    def counting(name, fn):
+        def wrapper(*a, **kw):
+            calls[name] += 1
+            return fn(*a, **kw)
+        return wrapper
+
+    monkeypatch.setattr(Machine, "run", counting("run", real_run))
+    monkeypatch.setattr(Machine, "time", counting("time", real_time))
+    monkeypatch.setattr(autotune_mod, "autotune",
+                        counting("autotune", autotune_mod.autotune))
+
+    cfg, params = _model("qwen1.5-4b")
+    engine = ServeEngine.from_config(
+        cfg, params=params, max_batch=2, max_seq=32,
+        schedule_cache=ScheduleCache(str(tmp_path / "cache")))
+    # the tuned kernel resolved in every bucket; untuned fleet members
+    # explicitly serve the -O3 baseline (None), never re-measured
+    rms = {k: v for k, v in engine.plan.items()
+           if (k[0] if isinstance(k, tuple) else k) == "rmsnorm"}
+    assert rms and all(a is not None for a in rms.values())
+    assert any(a is None for a in engine.plan.values())
+    engine.submit([1, 2, 3, 4], 4)
+    engine.submit([5, 6], 3)
+    engine.run()
+    assert calls == {"run": 0, "time": 0, "autotune": 0}
+
+
+def test_load_generator_replays_seeded_trace_and_reports():
+    cfg, params = _model("qwen1.5-4b")
+    traffic = TrafficConfig(qps=200.0, n_requests=6, n_tenants=2,
+                            prompt_len=(2, 6), output_len=(2, 5),
+                            vocab=cfg.vocab, seed=3)
+    engine = ServeEngine.from_config(
+        cfg, params=params, max_batch=2, max_seq=24,
+        tenants=[Tenant("t0", weight=2.0), Tenant("t1", weight=1.0)])
+    report = run_load(engine, traffic, pace=False)
+    assert report["completed"] == 6 and report["truncated"] == 0
+    assert report["tokens"] > 0 and report["tokens_per_s"] > 0
+    for k in ("latency_p50_s", "latency_p99_s", "ttft_p50_s"):
+        assert np.isfinite(report[k]) and report[k] >= 0
+    served = {r["tenant"]: r["served_tokens"]
+              for r in report["stats"]["tenants"]}
+    assert sum(served.values()) == report["tokens"]
+    assert report["stats"]["engine"]["lane_utilization"] > 0

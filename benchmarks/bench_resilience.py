@@ -1,0 +1,84 @@
+"""Resilience-layer benchmark: the same small campaign measured through
+fault channels of increasing hostility (transient rates 0%, 5%, 20%),
+always behind :class:`repro.sched.resilience.ResilientBackend`.
+
+Reports, per fault rate: campaign success rate, retries spent, transient
+faults absorbed, degraded cells, wall time, and the overhead vs the
+fault-free run — plus a correctness row asserting every surviving cell's
+optimized cycle count is bit-exact against the fault-free campaign (the
+whole point of retry + robust timing: faults cost wall time, never
+results).  In the CI ``--fast`` smoke set, so BENCH_ci.json tracks the
+fault-absorption trajectory."""
+
+import tempfile
+import time
+
+from repro.core import FaultSpec, FaultyMachine, build_stall_table
+from repro.sched import (FastTimingBackend, OptimizationSession,
+                         ResilientBackend, RetryPolicy,
+                         make_budgeted_strategy)
+from repro.launch.optimize import campaign_requests, parse_scenarios
+from benchmarks.common import emit
+
+FLEET = ("rmsnorm", "softmax")
+SCENARIOS = "4x512,8x4096"
+FAULT_RATES = (0.0, 0.05, 0.20)
+
+
+def _campaign(rate: float, timesteps: int):
+    db = build_stall_table()
+    if rate > 0:
+        spec = FaultSpec(seed=11, transient_rate=rate)
+        inner = FastTimingBackend(lambda: FaultyMachine(spec))
+    else:
+        inner = FastTimingBackend()
+    backend = ResilientBackend(inner, policy=RetryPolicy(max_retries=8))
+    session = OptimizationSession(
+        backend=backend, stall_db=db,
+        cache_dir=tempfile.mkdtemp(prefix="bench_resilience_"),
+        strategy=make_budgeted_strategy("random", timesteps=timesteps,
+                                        episode_length=8))
+    units = [(k, s) for k in FLEET for s in parse_scenarios(SCENARIOS)]
+    reqs = campaign_requests(units)
+    t0 = time.perf_counter()
+    results = session.optimize_many(reqs, on_error="collect")
+    wall = time.perf_counter() - t0
+    return results, backend.stats(), wall
+
+
+def run(timesteps: int = 32):
+    rows = []
+    baseline_cycles = {}
+    baseline_wall = None
+    for rate in FAULT_RATES:
+        results, stats, wall = _campaign(rate, timesteps)
+        ok = [r for r in results if r.ok]
+        cycles = {(r.kernel, r.scenario): r.artifact.optimized_cycles
+                  for r in ok}
+        if rate == 0.0:
+            baseline_cycles, baseline_wall = cycles, wall
+            exact = len(cycles)
+        else:
+            exact = sum(1 for k, v in cycles.items()
+                        if baseline_cycles.get(k) == v)
+        rows.append((f"resilience_rate{int(rate * 100)}_success",
+                     f"{len(ok)}/{len(results)}",
+                     f"{stats['retries']} retries "
+                     f"{stats['transients']} transients "
+                     f"{stats['degraded']} degraded"))
+        rows.append((f"resilience_rate{int(rate * 100)}_bitexact_cells",
+                     f"{exact}/{len(baseline_cycles)}",
+                     "optimized cycles vs fault-free campaign"))
+        rows.append((f"resilience_rate{int(rate * 100)}_wall_s",
+                     f"{wall:.2f}",
+                     f"{wall / baseline_wall:.2f}x of fault-free"))
+        assert len(ok) == len(results), \
+            f"cells failed at transient rate {rate} despite retries"
+        if rate > 0.0:
+            assert exact == len(baseline_cycles), \
+                f"fault rate {rate} changed campaign results"
+    return emit(rows, header=("name", "value", "derived"))
+
+
+if __name__ == "__main__":
+    run()

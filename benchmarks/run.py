@@ -44,9 +44,9 @@ def main() -> None:
 
     from benchmarks import (bench_autotune, bench_fleet,
                             bench_kernel_throughput, bench_microbench,
-                            bench_moves, bench_pipeline, bench_reward_loop,
-                            bench_rl_sensitivity, bench_roofline,
-                            bench_serve, bench_session,
+                            bench_moves, bench_pipeline, bench_resilience,
+                            bench_reward_loop, bench_rl_sensitivity,
+                            bench_roofline, bench_serve, bench_session,
                             bench_stall_resolution, bench_workload_analysis)
 
     suites = [
@@ -69,6 +69,10 @@ def main() -> None:
         # serve engine under Poisson load: p50/p99 latency + tokens/s vs
         # QPS, continuous vs gang admission, plans on/off (CPU smoke cell)
         ("serve_load", bench_serve.run),
+        # fault-injected campaigns through ResilientBackend: success rate,
+        # retries absorbed, and bit-exactness vs the fault-free run at
+        # transient rates {0, 5, 20}%
+        ("resilience", bench_resilience.run),
     ]
     if not args.fast:
         suites += [

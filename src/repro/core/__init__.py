@@ -6,6 +6,9 @@ assembly game env (§3.3–3.6) -> PPO (§3.7) -> optimized schedule + trace.
 
 from repro.core.analysis import Analysis, analyze
 from repro.core.env import AssemblyGame, can_swap
+from repro.core.faults import (FaultSpec, FaultyMachine, HardFault,
+                               MeasureError, MeasureTimeout,
+                               schedule_fingerprint)
 from repro.core.game import GameResult, run_inference, train_on_program
 from repro.core.isa import Control, Instruction, program_text
 from repro.core.machine import Machine, dataflow_reference
@@ -18,4 +21,6 @@ __all__ = [
     "run_inference", "train_on_program", "Control", "Instruction",
     "program_text", "Machine", "dataflow_reference", "build_stall_table",
     "clock_based_estimate", "parse_line", "parse_program", "PPOConfig",
+    "FaultSpec", "FaultyMachine", "HardFault", "MeasureError",
+    "MeasureTimeout", "schedule_fingerprint",
 ]

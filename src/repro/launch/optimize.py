@@ -32,13 +32,15 @@ from typing import List, Optional, Sequence, Tuple
 
 from repro.sched import (OptimizationSession, OptimizeRequest,
                          make_budgeted_strategy)
-from repro.sched.backends import BACKENDS, make_backend
+from repro.sched.backends import BACKENDS, make_backend, warm_start_memo
 from repro.sched.cache import DEFAULT_CACHE_DIR
+from repro.sched.resilience import FailureLedger, ResilientBackend
 from repro.sched.scenario import (DEFAULT_BUCKET, TARGETS, MachineTarget,
                                   Scenario, bucket_of, require_target)
 from repro.sched.session import STRATEGIES
 
 MEMO_FILENAME = "measure_memo.pkl"
+LEDGER_FILENAME = "campaign_state.json"
 
 FleetUnit = Tuple[str, Optional[Scenario]]
 
@@ -125,6 +127,22 @@ def main() -> None:
                     help="re-search even when a cached artifact exists")
     ap.add_argument("--deploy", action="store_true",
                     help="index lookup only; fails if not optimized yet")
+    ap.add_argument("--resilient", action="store_true",
+                    help="wrap the backend in ResilientBackend (per-measure "
+                         "retries, robust timing, circuit breaker)")
+    ap.add_argument("--max-retries", type=int, default=2, metavar="N",
+                    help="per-cell retry budget across resumable passes; a "
+                         "cell failing more than N+1 times total is skipped "
+                         "and stays in the failure ledger (default 2)")
+    ap.add_argument("--retry-backoff", type=float, default=0.0, metavar="S",
+                    help="base backoff before re-running a previously "
+                         "failed cell (doubles per prior failure)")
+    ap.add_argument("--strict", action="store_true",
+                    help="legacy fail-fast: the first failing cell aborts "
+                         "the campaign (no failure ledger, no supervision)")
+    ap.add_argument("--strict-memo", action="store_true",
+                    help="die on a corrupt --memo-dir payload instead of "
+                         "quarantining it and warm-starting empty")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args()
 
@@ -152,6 +170,8 @@ def main() -> None:
         get_kernel(name)               # fail fast on unknown names
 
     backend = make_backend(args.backend)
+    if args.resilient and not isinstance(backend, ResilientBackend):
+        backend = ResilientBackend(backend)
     memo_path = None
     if args.memo_dir:
         memo = getattr(backend, "memo", None)
@@ -162,9 +182,11 @@ def main() -> None:
             os.makedirs(args.memo_dir, exist_ok=True)
             memo_path = os.path.join(args.memo_dir, MEMO_FILENAME)
             if os.path.exists(memo_path):
-                # corrupt / version-mismatched files raise MemoVersionError
-                # here — loudly, before any search work starts
-                n = memo.load(memo_path)
+                # corrupt / version-mismatched payloads are quarantined
+                # with a warning and the campaign warm-starts empty;
+                # --strict-memo keeps the loud pre-search MemoVersionError
+                n = warm_start_memo(memo, memo_path,
+                                    strict=args.strict_memo)
                 print(f"[optimize] warm-started memo from {memo_path}: "
                       f"{n} entries")
 
@@ -197,18 +219,49 @@ def main() -> None:
 
     reqs = campaign_requests(units, targets, force=args.force,
                              verbose=args.verbose)
-    results = session.optimize_many(reqs, max_workers=args.workers)
-    for res in results:
+    ledger = None
+    if not args.strict:
+        # supervised campaign: per-cell fault isolation, failures land in
+        # the persistent ledger and re-running the same command retries
+        # exactly the failed cells (healthy ones are cache hits)
+        ledger = FailureLedger(os.path.join(args.cache_dir, LEDGER_FILENAME))
+        if len(ledger):
+            print(f"[optimize] resuming: {len(ledger)} failed cell(s) in "
+                  f"{ledger.path}")
+    results = session.optimize_many(reqs, max_workers=args.workers,
+                                    ledger=ledger,
+                                    max_retries=args.max_retries,
+                                    retry_backoff=args.retry_backoff)
+    ok = [r for r in results if r is not None and r.ok]
+    failed = [r for r in results if r is not None and not r.ok]
+    degraded = [r for r in ok if getattr(r, "degraded", False)]
+    for res in ok:
         art = res.artifact
         tag = "cache" if res.from_cache else res.strategy
+        if res.degraded:
+            tag += ", DEGRADED"
         print(f"[optimize] {label(res.kernel, res.scenario, res.target)}: "
               f"{art.baseline_cycles:.0f} -> {art.optimized_cycles:.0f} "
               f"cycles ({art.speedup:.3f}x, {tag}, {res.seconds:.1f}s)")
+    for res in failed:
+        state = "skipped (retry budget spent)" if res.skipped else "FAILED"
+        print(f"[optimize] {label(res.kernel, res.scenario, res.target)}: "
+              f"{state} after {res.attempts} attempt(s): "
+              f"{res.error_type}: {res.error}")
+    if ledger is not None:
+        print(f"[optimize] campaign: {len(ok)} succeeded "
+              f"({len(degraded)} degraded), {len(failed)} failed; "
+              f"ledger: {ledger.path} ({len(ledger)} open cell(s))")
+    health = getattr(session.backend, "summary", None)
+    if callable(health) and isinstance(session.backend, ResilientBackend):
+        print(f"[optimize] backend health: {session.backend.summary()}")
     if session.memo is not None:
         print(f"[optimize] shared memo: {session.memo.summary()}")
         if memo_path is not None:
             n = session.memo.save(memo_path)
             print(f"[optimize] saved memo to {memo_path} ({n} entries)")
+    if failed:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

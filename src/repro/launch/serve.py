@@ -60,8 +60,13 @@ def _engine_mode(args, cfg) -> None:
     engine = ServeEngine.from_config(
         cfg, params=params, max_batch=args.max_batch, max_seq=max_seq,
         block_size=args.block_size, kv_blocks=args.kv_blocks,
-        tenants=tenants, schedule_cache=args.schedule_cache)
+        tenants=tenants, schedule_cache=args.schedule_cache,
+        on_missing="raise" if args.strict_schedules else "baseline")
     _print_plan(engine)
+    if engine.counters.get("schedule_fallbacks"):
+        print(f"[serve] WARNING: {engine.counters['schedule_fallbacks']} "
+              f"kernel(s) serving the -O3 baseline (no cached schedule); "
+              f"use --strict-schedules to refuse degraded serving")
 
     traffic = TrafficConfig(
         qps=args.qps, n_requests=args.requests, n_tenants=args.tenants,
@@ -92,8 +97,10 @@ def _legacy_mode(args, cfg) -> None:
     if args.schedule_cache:
         from repro.launch.specs import kernel_fleet
         from repro.serve.engine import schedule_plan
+        on_missing = "raise" if args.strict_schedules else "baseline"
         for key, art in schedule_plan(kernel_fleet(cfg),
-                                      cache_dir=args.schedule_cache).items():
+                                      cache_dir=args.schedule_cache,
+                                      on_missing=on_missing).items():
             name, bucket = key if isinstance(key, tuple) else (key, None)
             label = name if bucket in (None, "default") else f"{name}@{bucket}"
             state = (f"{art.speedup:.3f}x ({art.optimized_cycles:.0f} cycles)"
@@ -122,6 +129,10 @@ def main() -> None:
     ap.add_argument("--schedule-cache", default=None, metavar="DIR",
                     help="resolve the arch's RL-optimized kernel schedules "
                          "from this cache (index lookup only, no autotune)")
+    ap.add_argument("--strict-schedules", action="store_true",
+                    help="refuse to serve kernels without a cached schedule "
+                         "(on_missing='raise'); default degrades them to "
+                         "the -O3 baseline with a warning")
     # engine mode
     ap.add_argument("--qps", type=float, default=None,
                     help="offered Poisson arrival rate; enables the "

@@ -17,13 +17,15 @@ from repro.sched.baseline import naive_schedule, schedule
 from repro.sched.cache import (TARGET, Artifact, CacheVersionError,
                                ScheduleCache, load, save)
 from repro.sched.lowering import LoweredKernel, lower, resolve_schedule
+from repro.sched.resilience import (FailureLedger, ResilientBackend,
+                                    RetryPolicy)
 from repro.sched.scenario import (DEFAULT_BUCKET, DEFAULT_TARGET, TARGETS,
                                   MachineTarget, Scenario, get_target,
                                   nearest_bucket, register_target,
                                   require_target, unregister_target)
 from repro.sched.session import (STRATEGIES, GreedySwapStrategy, KernelDef,
-                                 OptimizationSession, OptimizeRequest,
-                                 OptimizeResult, PPOStrategy,
+                                 OptimizationSession, OptimizeFailure,
+                                 OptimizeRequest, OptimizeResult, PPOStrategy,
                                  RandomSearchStrategy, SearchOutcome,
                                  SearchStrategy, make_budgeted_strategy,
                                  make_strategy)
@@ -33,12 +35,13 @@ from repro.sched.verify import probabilistic_test
 __all__ = [
     # session API
     "OptimizationSession", "OptimizeRequest", "OptimizeResult",
-    "SearchStrategy", "SearchOutcome", "PPOStrategy", "GreedySwapStrategy",
-    "RandomSearchStrategy", "STRATEGIES", "make_strategy",
-    "make_budgeted_strategy",
-    # backends
+    "OptimizeFailure", "SearchStrategy", "SearchOutcome", "PPOStrategy",
+    "GreedySwapStrategy", "RandomSearchStrategy", "STRATEGIES",
+    "make_strategy", "make_budgeted_strategy",
+    # backends + resilience
     "MeasureBackend", "OracleBackend", "FastTimingBackend", "PooledBackend",
     "SharedMeasureMemo", "BACKENDS", "make_backend",
+    "ResilientBackend", "RetryPolicy", "FailureLedger",
     # cache
     "Artifact", "ScheduleCache", "CacheVersionError", "load", "save",
     # scenario / target axes

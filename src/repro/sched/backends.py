@@ -239,6 +239,34 @@ class SharedMeasureMemo:
         return merged
 
 
+def warm_start_memo(memo: SharedMeasureMemo, path: str,
+                    strict: bool = False) -> int:
+    """Best-effort campaign warm-start: merge the memo persisted at
+    ``path`` into ``memo``, treating corruption as a recoverable event.
+
+    A corrupt or unknown-version file is renamed to ``path + ".quarantine"``
+    with a warning and the campaign starts from an empty memo — losing a
+    warm-start only costs re-timing, while dying on it costs the whole
+    campaign (the failure mode this module's loud :meth:`SharedMeasureMemo.load`
+    is *for* when callers want strictness; ``strict=True`` keeps that
+    raise).  Missing files are simply an empty warm-start.  Returns the
+    number of entries merged."""
+    import warnings
+    if not os.path.exists(path):
+        return 0
+    try:
+        return memo.load(path)
+    except MemoVersionError as e:
+        if strict:
+            raise
+        quarantine = f"{path}.quarantine"
+        os.replace(path, quarantine)
+        warnings.warn(
+            f"corrupt measurement memo {path} ({e}); quarantined to "
+            f"{quarantine}, starting from an empty memo")
+        return 0
+
+
 def _read_memo_payload(path: str) -> dict:
     """Read + validate one persisted memo payload (shared by load and the
     merge-on-save path; every failure mode is a loud MemoVersionError)."""

@@ -273,6 +273,8 @@ class ScheduleCache:
         self.hits = 0
         self.misses = 0
         self.disk_loads = 0
+        self.fallbacks = 0        # serve-time baseline fallbacks (lowering)
+        self.quarantined = 0      # corrupt files renamed *.quarantine
 
     # -- internals ----------------------------------------------------------
 
@@ -424,6 +426,57 @@ class ScheduleCache:
                             artifact.bucket)] = artifact.config
         return path
 
+    # -- quarantine ---------------------------------------------------------
+
+    def quarantine_kernel(self, kernel: str,
+                          target: Union[str, MachineTarget, None] = None
+                          ) -> List[str]:
+        """Rename this kernel's unreadable cache files to ``*.quarantine``
+        so one corrupt artifact stops poisoning every load of the
+        directory.  Direct :meth:`lookup`/:func:`load` calls still raise
+        :class:`CacheVersionError` loudly on corrupt files — quarantine is
+        an *explicit* recovery step, invoked by the serve shim's
+        ``on_missing="baseline"`` policy (``sched.lowering``) after such a
+        raise.  A quarantined sidecar takes its ``.tsass`` twin with it
+        (and vice versa): a surviving half-artifact would be
+        indistinguishable from a clean miss.  Returns the renamed paths.
+        """
+        tgt = self._target(target)
+        d = os.path.join(self.cache_dir, tgt, kernel)
+        renamed: List[str] = []
+
+        def _quarantine(*paths: str) -> None:
+            for p in paths:
+                if os.path.exists(p):
+                    os.replace(p, f"{p}.quarantine")
+                    renamed.append(p)
+
+        if os.path.isdir(d):
+            try:
+                load_index(self.cache_dir, tgt, kernel)
+            except CacheVersionError:
+                _quarantine(os.path.join(d, "index.json"))
+            for f in sorted(os.listdir(d)):
+                if not f.endswith(".json") or f == "index.json":
+                    continue
+                stem = f[:-5]
+                json_path = os.path.join(d, f)
+                tsass_path = os.path.join(d, f"{stem}.tsass")
+                try:
+                    _load_files(tsass_path, json_path)
+                except (CacheVersionError, ValueError, KeyError, OSError):
+                    _quarantine(json_path, tsass_path)
+        with self._lock:
+            self.quarantined += len(renamed)
+            # drop memoized state that may point at quarantined files
+            for k in [k for k in self._best_cfg if k[0] == kernel
+                      and k[1] == tgt]:
+                del self._best_cfg[k]
+            self._lru.clear()
+        return renamed
+
     def stats(self) -> Dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
-                "disk_loads": self.disk_loads, "lru_entries": len(self._lru)}
+                "disk_loads": self.disk_loads, "lru_entries": len(self._lru),
+                "fallbacks": self.fallbacks,
+                "quarantined": self.quarantined}

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Dict, List, Sequence
 
 import jax
@@ -377,7 +378,8 @@ def lower(spec: KernelSpec) -> LoweredKernel:
 # serve-time dispatch shim
 # ---------------------------------------------------------------------------
 
-def resolve_schedule(cache, kernel: str, scenario=None, target=None):
+def resolve_schedule(cache, kernel: str, scenario=None, target=None,
+                     on_missing="baseline"):
     """Deploy-time counterpart of :func:`lower`: instead of *building* a
     schedule, resolve the one already tuned for this workload point.
 
@@ -385,21 +387,67 @@ def resolve_schedule(cache, kernel: str, scenario=None, target=None):
     hitting the engine) dispatches to the **nearest tuned bucket** of the
     kernel's cache index — a pure index lookup, zero autotune and zero
     machine execution, falling back through the default bucket so
-    pre-scenario caches keep serving.  Returns ``None`` for a kernel that
-    was never optimized (it serves the -O3 baseline this module's listing
-    feeds to :mod:`repro.sched.baseline`).
+    pre-scenario caches keep serving.
+
+    ``on_missing`` is the degradation policy:
+
+    * ``"baseline"`` (default) — a kernel with no usable cached schedule
+      degrades gracefully: ``None`` is returned (the engine serves the
+      -O3 baseline this module's listing feeds to
+      :mod:`repro.sched.baseline`) and the cache's ``fallbacks`` counter
+      ticks.  A *corrupt* cached schedule
+      (:class:`~repro.sched.cache.CacheVersionError`) is quarantined
+      (``*.quarantine``, via :meth:`ScheduleCache.quarantine_kernel`)
+      with a warning, the lookup retried once over the cleaned
+      directory, and only then falls back to the baseline.
+    * ``"raise"`` — strict mode for production rollouts that must not
+      silently serve unoptimized kernels: a missing schedule raises
+      :class:`FileNotFoundError` and a corrupt one propagates its
+      :class:`CacheVersionError` untouched (no quarantine).
 
     ``cache`` is a :class:`repro.sched.cache.ScheduleCache`; ``scenario``
     a :class:`repro.sched.scenario.Scenario`, a bucket string, or ``None``
     for the legacy single-point lookup.
     """
-    if scenario is None:
-        return cache.lookup_best(kernel, target=target)
-    return cache.dispatch(kernel, scenario, target=target)
+    if on_missing not in ("baseline", "raise"):
+        raise ValueError(
+            f"on_missing must be 'baseline' or 'raise', got {on_missing!r}")
+
+    def _lookup():
+        if scenario is None:
+            return cache.lookup_best(kernel, target=target)
+        return cache.dispatch(kernel, scenario, target=target)
+
+    if on_missing == "raise":
+        art = _lookup()
+        if art is None:
+            raise FileNotFoundError(
+                f"no cached schedule for {kernel} and on_missing='raise'; "
+                f"run optimize() offline first or serve with "
+                f"on_missing='baseline'")
+        return art
+
+    from repro.sched.cache import CacheVersionError
+    try:
+        art = _lookup()
+    except CacheVersionError as e:
+        quarantine = getattr(cache, "quarantine_kernel", None)
+        renamed = quarantine(kernel, target) if quarantine else []
+        warnings.warn(
+            f"corrupt cached schedule for {kernel} ({e}); quarantined "
+            f"{len(renamed)} file(s), serving the -O3 baseline unless a "
+            f"clean entry remains")
+        try:
+            art = _lookup()          # retry once over the cleaned directory
+        except CacheVersionError:
+            art = None
+    if art is None and hasattr(cache, "fallbacks"):
+        cache.fallbacks += 1
+    return art
 
 
 def schedule_plan(kernel_names, cache_dir=None, target=None, cache=None,
-                  scenario=None):
+                  scenario=None, on_missing="baseline"):
     """Deploy-time schedule lookup for a serve engine's kernel fleet —
     the fleet-shaped wrapper over :func:`resolve_schedule` (and what
     ``repro.serve.engine.schedule_plan`` re-exports).
@@ -412,10 +460,13 @@ def schedule_plan(kernel_names, cache_dir=None, target=None, cache=None,
 
     Every resolution is a nearest-tuned-bucket pure index lookup — **no**
     autotune and no machine execution at serve time (the paper's §4.2
-    search/deploy split).  ``None`` marks a kernel that was never
-    optimized (it serves the -O3 baseline).  An unreadable or
-    unknown-version cache raises loudly rather than silently degrading a
-    production rollout.
+    search/deploy split).  ``None`` marks a kernel that serves the -O3
+    baseline.  ``on_missing`` is :func:`resolve_schedule`'s degradation
+    policy: ``"baseline"`` (default) degrades missing/corrupt entries to
+    the baseline with a warning + quarantine; ``"raise"`` keeps the loud
+    behaviour a production rollout may prefer (missing entries raise
+    :class:`FileNotFoundError`, corrupt caches their
+    :class:`CacheVersionError`).
     """
     from repro.sched.cache import DEFAULT_CACHE_DIR, TARGET, ScheduleCache
     if cache is None:
@@ -424,9 +475,11 @@ def schedule_plan(kernel_names, cache_dir=None, target=None, cache=None,
     plan = {}
     for item in kernel_names:
         if isinstance(item, str):
-            plan[item] = resolve_schedule(cache, item, scenario)
+            plan[item] = resolve_schedule(cache, item, scenario,
+                                          on_missing=on_missing)
         else:
             name, scen = item
             key = (name, scen.bucket if scen is not None else "default")
-            plan[key] = resolve_schedule(cache, name, scen)
+            plan[key] = resolve_schedule(cache, name, scen,
+                                         on_missing=on_missing)
     return plan

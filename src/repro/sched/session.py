@@ -116,10 +116,38 @@ class OptimizeResult:
     seconds: float = 0.0
     scenario: Optional[str] = None          # bucket key (None = default)
     target: str = TARGET
+    degraded: bool = False                  # measured with an open breaker
 
     @property
     def speedup(self) -> float:
         return self.artifact.speedup
+
+    @property
+    def ok(self) -> bool:
+        return True
+
+
+@dataclasses.dataclass
+class OptimizeFailure:
+    """One cell's captured failure from a supervised ``optimize_many``
+    (``on_error="collect"``): the fleet keeps going, the error rides
+    along.  ``attempts`` counts this cell's failures across resumable
+    campaign passes (from the :class:`repro.sched.resilience.FailureLedger`
+    when one is attached); ``skipped=True`` marks a cell whose retry
+    budget was already exhausted, so this pass did not re-run it."""
+    kernel: str
+    error: str
+    error_type: str
+    attempts: int = 1
+    scenario: Optional[str] = None          # bucket key (None = default)
+    target: str = TARGET
+    request: Optional[OptimizeRequest] = None
+    seconds: float = 0.0
+    skipped: bool = False
+
+    @property
+    def ok(self) -> bool:
+        return False
 
 
 # ---------------------------------------------------------------------------
@@ -430,7 +458,8 @@ class OptimizationSession:
                     from_cache=True, strategy=strategy.name,
                     backend=backend.name, stats=[], tune=tune,
                     seconds=time.time() - t_start,
-                    scenario=bucket, target=target.name)
+                    scenario=bucket, target=target.name,
+                    degraded=bool(getattr(backend, "circuit_open", False)))
 
         spec: KernelSpec = build_spec(kdef.make_spec, cfg, scenario)
         o3 = baseline.schedule(lowering.lower(spec))
@@ -474,28 +503,119 @@ class OptimizationSession:
             strategy=strategy.name, backend=backend.name,
             stats=outcome.stats, tune=tune, game=outcome.game,
             seconds=time.time() - t_start, scenario=bucket,
-            target=target.name)
+            target=target.name,
+            degraded=bool(getattr(backend, "circuit_open", False)))
+
+    def _cell_key(self, req: OptimizeRequest) -> str:
+        """The request's campaign-cell id (``kernel@bucket@target``) —
+        the key failure ledgers track retries under."""
+        from repro.sched.resilience import cell_key
+        target = (get_target(req.target) if req.target is not None
+                  else self.target)
+        return cell_key(req.kernel_name, req.scenario, target)
+
+    def _optimize_isolated(self, req: OptimizeRequest, ledger,
+                           max_retries: Optional[int],
+                           retry_backoff: float
+                           ) -> Union[OptimizeResult, "OptimizeFailure"]:
+        """One supervised cell: run ``optimize``, capture any failure
+        (verify refusal, backend exhaustion, hard fault, ...) instead of
+        letting it kill the fleet; consult/update the ledger so resumable
+        passes retry exactly the still-failing cells with backoff."""
+        bucket = req.scenario.bucket if req.scenario is not None else None
+        target = (get_target(req.target) if req.target is not None
+                  else self.target)
+        cell = self._cell_key(req)
+        prior, backoff = 0, 0.0
+        if ledger is not None:
+            prior = ledger.attempts(cell)
+            if not ledger.should_attempt(cell, max_retries):
+                entry = ledger.failed_cells().get(cell, {})
+                return OptimizeFailure(
+                    kernel=req.kernel_name,
+                    error=entry.get("error", "retry budget exhausted"),
+                    error_type=entry.get("error_type", "Skipped"),
+                    attempts=prior, scenario=bucket, target=target.name,
+                    request=req, skipped=True)
+            if prior and retry_backoff > 0:
+                backoff = retry_backoff * (2.0 ** (prior - 1))
+                time.sleep(backoff)
+        t0 = time.time()
+        try:
+            res = self.optimize(req)
+        except Exception as e:
+            if ledger is not None:
+                ledger.record_failure(cell, e, backoff=backoff)
+            return OptimizeFailure(
+                kernel=req.kernel_name, error=str(e),
+                error_type=type(e).__name__, attempts=prior + 1,
+                scenario=bucket, target=target.name, request=req,
+                seconds=time.time() - t0)
+        if ledger is not None:
+            ledger.record_success(cell)
+        return res
 
     def optimize_many(self,
                       requests: Iterable[Union[OptimizeRequest, str, KernelDef]],
-                      max_workers: Optional[int] = None) -> List[OptimizeResult]:
+                      max_workers: Optional[int] = None,
+                      on_error: str = "raise",
+                      ledger=None,
+                      max_retries: Optional[int] = None,
+                      retry_backoff: float = 0.0
+                      ) -> List[Union[OptimizeResult, "OptimizeFailure"]]:
         """Optimize a fleet of kernels through the shared session state.
 
         Serial by default (memo statistics stay exact); ``max_workers > 1``
         fans kernels out over a thread pool — measured values are
         deterministic either way (the memo is bit-exact), only the
         hit/miss attribution can shift under concurrency.
+
+        ``on_error="raise"`` (default) keeps the legacy contract: the
+        first failing cell's exception propagates — but the threaded path
+        now lets every sibling finish first instead of discarding their
+        work mid-flight.  ``on_error="collect"`` supervises the fleet:
+        each cell's failure is captured as an :class:`OptimizeFailure` in
+        the returned list (same order as the requests) and the campaign
+        keeps going.  Attaching a
+        :class:`repro.sched.resilience.FailureLedger` (implies collect)
+        makes the campaign *resumable*: failures persist with attempt
+        counts, a later identical ``optimize_many`` retries only the
+        still-failed cells (after ``retry_backoff * 2**(attempts-1)``
+        seconds), and cells past ``max_retries`` failures come back as
+        ``skipped`` failures without re-running.
         """
+        if on_error not in ("raise", "collect"):
+            raise ValueError(
+                f"on_error must be 'raise' or 'collect', got {on_error!r}")
+        collect = on_error == "collect" or ledger is not None
         reqs = [r if isinstance(r, OptimizeRequest) else OptimizeRequest(kernel=r)
                 for r in requests]
+
+        def run_one(r: OptimizeRequest):
+            if collect:
+                return self._optimize_isolated(r, ledger, max_retries,
+                                               retry_backoff)
+            return self.optimize(r)
+
         if max_workers is not None and max_workers > 1 and len(reqs) > 1:
             # build each target's stall table once, not racing in the pool
             for tgt in {get_target(r.target) if r.target is not None
                         else self.target for r in reqs}:
                 self.stall_table(tgt)
             with ThreadPoolExecutor(max_workers=max_workers) as pool:
-                return list(pool.map(self.optimize, reqs))
-        return [self.optimize(r) for r in reqs]
+                futures = [pool.submit(run_one, r) for r in reqs]
+                outcomes, first_err = [], None
+                for f in futures:     # gather ALL siblings before raising
+                    try:
+                        outcomes.append(f.result())
+                    except Exception as e:
+                        outcomes.append(None)
+                        if first_err is None:
+                            first_err = e
+                if first_err is not None:
+                    raise first_err
+                return outcomes
+        return [run_one(r) for r in reqs]
 
     # -- §4.2 Listing 5: deployment lookup ------------------------------------
 

@@ -112,6 +112,7 @@ class ServeEngine:
                  starvation_bound: int = 8, prefill_chunk: int = 4,
                  admission: str = "continuous",
                  schedule_cache: Optional[Union[ScheduleCache, str]] = None,
+                 on_missing: str = "baseline",
                  mesh=None, rng_seed: int = 0):
         if cfg.family == "encdec":
             raise ValueError("ServeEngine serves decoder-only families; "
@@ -153,7 +154,11 @@ class ServeEngine:
         if schedule_cache is not None:
             # Lazy import: launch.specs imports repro.serve at module load.
             from repro.launch.specs import kernel_fleet
-            self.plan = schedule_plan(kernel_fleet(cfg), cache=schedule_cache)
+            # on_missing="baseline" (default): kernels with missing/corrupt
+            # cached schedules degrade to the -O3 baseline (None plan
+            # entries, counted below); "raise" refuses to start degraded
+            self.plan = schedule_plan(kernel_fleet(cfg), cache=schedule_cache,
+                                      on_missing=on_missing)
         else:
             self.plan = {}
 
@@ -161,7 +166,9 @@ class ServeEngine:
         self.finished: List[Request] = []
         self.counters = {"engine_steps": 0, "passes": 0, "lane_tokens": 0,
                          "admissions": 0, "stalls": 0, "preemptions": 0,
-                         "truncations": 0}
+                         "truncations": 0,
+                         "schedule_fallbacks": sum(
+                             1 for art in self.plan.values() if art is None)}
 
     @classmethod
     def from_config(cls, cfg: ModelConfig, **kwargs) -> "ServeEngine":

@@ -1,0 +1,37 @@
+"""Strategy-evaluator bench: the full search roster (PPO / greedy /
+random / beam x {oracle, cost, policy}) raced over the §5.7 kernel pair
+under one small per-cell measurement budget, plus the trained cost
+model's held-out rank correlation against the oracle cycles.  The
+headline row pair: beam-cost matching greedy's best cycles on a quarter
+of its real measurements.
+
+``lookahead`` is left out of the smoke roster — its per-child rollouts
+dominate wall time without changing the comparison; run
+``python -m repro.launch.evaluate`` for the full table.
+"""
+
+from repro.costmodel import evaluate_strategies
+from benchmarks.common import emit
+
+SMOKE_STRATEGIES = ("ppo", "greedy", "random", "beam-oracle", "beam-cost",
+                    "beam-policy")
+
+
+def run(budget: int = 256):
+    result = evaluate_strategies(strategies=SMOKE_STRATEGIES,
+                                 budget=budget, seed=0, train_steps=800)
+    rc = result["rank_correlation"]
+    rows = []
+    for r in sorted(result["rows"],
+                    key=lambda r: (r["kernel"], r["best_cycles"])):
+        rows.append(("evaluator", r["strategy"], r["kernel"],
+                     round(r["baseline_cycles"]), round(r["best_cycles"]),
+                     r["improvement_pct"], r["measurements"], r["seconds"]))
+    rows.append(("evaluator", "cost_model", "heldout_spearman", "", "",
+                 round(rc, 3) if rc == rc else "nan",
+                 result["dataset_rows"], ""))
+    print(f"# cost model: held-out Spearman {rc:.3f} over "
+          f"{result['dataset_rows']} corpus rows (budget {budget}/cell)")
+    emit(rows, header=("bench", "strategy", "kernel", "baseline", "best",
+                       "impr_pct", "measurements", "seconds"))
+    return rows

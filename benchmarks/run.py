@@ -42,7 +42,7 @@ def main() -> None:
                     help="write a JSON summary of every suite here")
     args = ap.parse_args()
 
-    from benchmarks import (bench_autotune, bench_fleet,
+    from benchmarks import (bench_autotune, bench_evaluator, bench_fleet,
                             bench_kernel_throughput, bench_microbench,
                             bench_moves, bench_pipeline, bench_resilience,
                             bench_reward_loop, bench_rl_sensitivity,
@@ -73,6 +73,9 @@ def main() -> None:
         # retries absorbed, and bit-exactness vs the fault-free run at
         # transient rates {0, 5, 20}%
         ("resilience", bench_resilience.run),
+        # strategy evaluator: the search roster raced under one budget +
+        # the memo-trained cost model's held-out rank correlation
+        ("strategy_evaluator", bench_evaluator.run),
     ]
     if not args.fast:
         suites += [

@@ -21,9 +21,21 @@ from repro.core.analysis import Analysis
 from repro.core.isa import Instruction, NUM_SEMAPHORES
 
 
+# the analysis-independent leading columns of every embedding row:
+# valid + 6 wait bits + read/write bar + yield + stall + is_mem + pred.
+# The remaining ``analysis.max_operands`` operand columns vary per kernel,
+# so cross-kernel consumers (the cost-model featurizer) aggregate over
+# exactly this fixed prefix.
+FIXED_FEATURES = 1 + NUM_SEMAPHORES + 2 + 1 + 1 + 1 + 1
+
+
+def fixed_feature_dim() -> int:
+    """Width of the kernel-independent embedding-row prefix."""
+    return FIXED_FEATURES
+
+
 def feature_dim(analysis: Analysis) -> int:
-    # valid + 6 wait bits + read/write bar + yield + stall + is_mem + pred
-    return 1 + NUM_SEMAPHORES + 2 + 1 + 1 + 1 + 1 + analysis.max_operands
+    return FIXED_FEATURES + analysis.max_operands
 
 
 def embed_instruction(ins: Instruction, analysis: Analysis) -> np.ndarray:

@@ -631,6 +631,49 @@ class AssemblyGame:
         finally:
             self._swap(q)
 
+    def set_order(self, ids: Sequence[int]) -> None:
+        """Teleport the game to an arbitrary schedule given as a
+        position -> identity permutation (the same encoding as ``id_at``),
+        rebuilding every incremental structure from scratch.
+
+        The beam / lookahead strategies use this to jump between candidate
+        schedules instead of replaying swap sequences.  The caller is
+        responsible for only supplying orders *reachable by masked swaps*
+        (e.g. produced by expanding ``valid_actions`` from another reached
+        order) — legality is not re-checked here, exactly like
+        ``begin_step`` trusts its mask.
+        """
+        ids = np.asarray(ids, dtype=np.int64)
+        if sorted(ids.tolist()) != list(range(self.n)):
+            raise ValueError("set_order wants a permutation of "
+                             f"range({self.n})")
+        self.program = [self.original[i] for i in ids]
+        self.id_at = ids.copy()
+        self._ids = ids.tolist()
+        self.pos_of = np.argsort(ids).tolist()
+        self.slot_pos = {k: self.pos_of[idx]
+                         for k, idx in enumerate(self.slots)}
+        self.slot_at = [-1] * self.n
+        for k, pos in self.slot_pos.items():
+            self.slot_at[pos] = k
+        self._prefix = \
+            [0] + np.cumsum(self.deps.stall[self.id_at]).tolist()
+        self._mask_cache = None
+        self._ok_at[:] = -1
+        self._pending = None
+
+    def measure_schedule(self) -> float:
+        """Measure the current schedule through the normal path (timer +
+        memo, or the oracle), updating the run-global best.  The verified
+        measurement the guided-search strategies route their top-k
+        candidates through — never a model prediction."""
+        cycles = self._measure()
+        self.prev_cycles = cycles
+        if cycles < self.best_cycles:
+            self.best_cycles = cycles
+            self.best_program = list(self.program)
+        return cycles
+
     def action_swap_pos(self, action: int) -> int:
         """The swap boundary the action's *first* hop exchanges (positions
         ``pos-1``/``pos``), decoded exactly as :meth:`begin_step` does."""

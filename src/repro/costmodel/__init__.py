@@ -1,0 +1,33 @@
+"""Learned cost-model subsystem (ROADMAP item: learned cost model).
+
+Turns the cross-kernel measurement memo into training data
+(:mod:`repro.costmodel.dataset`), fits a small JAX MLP cycle predictor
+(:mod:`repro.costmodel.model`), and spends it through ranker-guided
+search strategies (:mod:`repro.costmodel.search` via
+:mod:`repro.costmodel.rankers`) that verify only their top-k candidates
+on the real timer.  :mod:`repro.costmodel.evaluator` races every
+registered strategy under one measurement budget
+(``python -m repro.launch.evaluate``).
+"""
+
+from repro.costmodel.dataset import (FEATURE_DIM, CostDataset,
+                                     CostModelVersionError,
+                                     ProgramFeaturizer)
+from repro.costmodel.evaluator import (DEFAULT_STRATEGIES,
+                                       evaluate_strategies, format_table,
+                                       heldout_rank_correlation, spearman)
+from repro.costmodel.model import CostModel
+from repro.costmodel.rankers import (CostModelRanker, CostRanker,
+                                     OracleRanker, PolicyRanker,
+                                     make_ranker)
+from repro.costmodel.search import BeamSearchStrategy, GreedyLookaheadStrategy
+
+__all__ = [
+    "CostDataset", "ProgramFeaturizer", "FEATURE_DIM",
+    "CostModel", "CostModelVersionError",
+    "CostRanker", "OracleRanker", "CostModelRanker", "PolicyRanker",
+    "make_ranker",
+    "BeamSearchStrategy", "GreedyLookaheadStrategy",
+    "evaluate_strategies", "format_table", "heldout_rank_correlation",
+    "spearman", "DEFAULT_STRATEGIES",
+]

@@ -1,0 +1,214 @@
+"""The learned cycle predictor: a small JAX MLP over schedule features.
+
+Trained on :class:`repro.costmodel.dataset.CostDataset` with two heads
+sharing one scalar output:
+
+* **MSE on log-cycles** — absolute calibration, so predictions stay
+  comparable across kernels of very different magnitudes;
+* **pairwise ranking loss over same-kernel pairs** (the CUDA-L1 recipe,
+  2507.14111): for two schedules of one program, a logistic loss on the
+  prediction difference signed by the measured ordering.  Search only
+  needs *ranking* to be right — the top-k candidates it verifies on the
+  real timer are chosen by order, not by value — so the ranking head
+  optimizes exactly the quantity the beam consumes.
+
+``fit`` is bit-reproducible under a fixed seed: batch indices come from a
+``numpy`` generator seeded once, parameters from ``jax.random.PRNGKey``,
+and the jitted update is deterministic on CPU.  Models persist to a
+versioned ``.npz``; unknown versions raise
+:class:`~repro.costmodel.dataset.CostModelVersionError` (the schedule
+cache / measurement memo convention).
+"""
+
+from __future__ import annotations
+
+import zipfile
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.costmodel.dataset import (FEATURE_VERSION, CostDataset,
+                                     CostModelVersionError)
+from repro.optim import adam
+from repro.optim.adamw import apply_updates
+
+MODEL_FORMAT = "repro-cost-model"
+MODEL_VERSION = 1
+_KNOWN_MODEL_VERSIONS = (1,)
+
+DEFAULT_HIDDEN = (64, 64)
+
+
+class CostModel:
+    """MLP cycle predictor: ``init`` / ``apply`` / ``loss`` plus the
+    convenience ``fit`` / ``predict_log`` / ``save`` / ``load`` wrappers.
+
+    ``params`` is a flat dict of jnp arrays (``w0, b0, w1, b1, ...``);
+    ``norm`` holds the feature/target standardization (means and scales)
+    learned from the training split — stored outside the gradient tree.
+    """
+
+    def __init__(self, params: Dict[str, jnp.ndarray],
+                 norm: Dict[str, np.ndarray],
+                 feature_version: int = FEATURE_VERSION):
+        self.params = params
+        self.norm = norm
+        self.feature_version = int(feature_version)
+
+    # -- the three core functions (pure, jit-friendly) -----------------------
+
+    @staticmethod
+    def init(key: jax.Array, in_dim: int,
+             hidden: Sequence[int] = DEFAULT_HIDDEN) -> Dict[str, jnp.ndarray]:
+        dims = (int(in_dim),) + tuple(hidden) + (1,)
+        params: Dict[str, jnp.ndarray] = {}
+        for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+            key, sub = jax.random.split(key)
+            params[f"w{i}"] = (jax.random.normal(sub, (a, b), jnp.float32)
+                               * np.sqrt(2.0 / a))
+            params[f"b{i}"] = jnp.zeros((b,), jnp.float32)
+        return params
+
+    @staticmethod
+    def apply(params: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+        """Normalized-log-cycle predictions for normalized features."""
+        n_layers = len(params) // 2
+        h = x
+        for i in range(n_layers - 1):
+            h = jax.nn.relu(h @ params[f"w{i}"] + params[f"b{i}"])
+        last = n_layers - 1
+        return (h @ params[f"w{last}"] + params[f"b{last}"])[..., 0]
+
+    @staticmethod
+    def loss(params: Dict[str, jnp.ndarray], x: jnp.ndarray, y: jnp.ndarray,
+             group: jnp.ndarray, rank_weight: float = 1.0
+             ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+        """MSE + pairwise same-group ranking loss over one batch.
+
+        Every ordered pair (i, j) in the batch with ``group[i] == group[j]``
+        and a measurable target difference contributes
+        ``softplus(-sign(y_i - y_j) * (pred_i - pred_j))`` — minimized when
+        the prediction difference agrees in sign (and grows in margin) with
+        the measured one.
+        """
+        pred = CostModel.apply(params, x)
+        mse = jnp.mean((pred - y) ** 2)
+        dp = pred[:, None] - pred[None, :]
+        dy = y[:, None] - y[None, :]
+        same = ((group[:, None] == group[None, :])
+                & (jnp.abs(dy) > 1e-6))
+        pair = jax.nn.softplus(-jnp.sign(dy) * dp)
+        rank = (jnp.sum(jnp.where(same, pair, 0.0))
+                / jnp.maximum(jnp.sum(same), 1))
+        return mse + rank_weight * rank, (mse, rank)
+
+    # -- training ------------------------------------------------------------
+
+    @classmethod
+    def fit(cls, dataset: CostDataset, steps: int = 1500, seed: int = 0,
+            batch_size: int = 256, lr: float = 1e-3,
+            hidden: Sequence[int] = DEFAULT_HIDDEN,
+            rank_weight: float = 1.0, verbose: bool = False
+            ) -> Tuple["CostModel", List[Dict]]:
+        """Train on the dataset's train split; returns (model, history).
+
+        Bit-reproducible under a fixed ``seed``: re-running this call on
+        the same dataset yields parameter arrays that compare equal.
+        """
+        train = dataset.train
+        if len(train) < 2:
+            raise ValueError(
+                f"cost-model training needs >= 2 train rows, got "
+                f"{len(train)} (warm a memo first)")
+        X = train.X.astype(np.float32)
+        y = train.y.astype(np.float32)
+        mu = X.mean(axis=0)
+        sigma = X.std(axis=0) + 1e-6
+        ymu = np.float32(y.mean())
+        ystd = np.float32(y.std() + 1e-6)
+        Xn = (X - mu) / sigma
+        yn = (y - ymu) / ystd
+        norm = {"mu": mu.astype(np.float32),
+                "sigma": sigma.astype(np.float32),
+                "ymu": np.asarray(ymu, np.float32),
+                "ystd": np.asarray(ystd, np.float32)}
+
+        params = cls.init(jax.random.PRNGKey(seed), X.shape[1], hidden)
+        opt = adam(lr, max_grad_norm=1.0)
+        opt_state = opt.init(params)
+
+        @jax.jit
+        def update(params, opt_state, xb, yb, gb):
+            (total, (mse, rank)), grads = jax.value_and_grad(
+                cls.loss, has_aux=True)(params, xb, yb, gb,
+                                        rank_weight=rank_weight)
+            upd, opt_state = opt.update(grads, opt_state, params)
+            return apply_updates(params, upd), opt_state, total, mse, rank
+
+        rng = np.random.default_rng(seed)
+        n = Xn.shape[0]
+        bs = min(batch_size, n)
+        history: List[Dict] = []
+        for step in range(int(steps)):
+            idx = rng.integers(0, n, size=bs)
+            params, opt_state, total, mse, rank = update(
+                params, opt_state, jnp.asarray(Xn[idx]),
+                jnp.asarray(yn[idx]), jnp.asarray(train.group[idx]))
+            if step % 100 == 0 or step == int(steps) - 1:
+                row = {"step": step, "loss": float(total),
+                       "mse": float(mse), "rank": float(rank)}
+                history.append(row)
+                if verbose:
+                    print(f"[costmodel] step={step} loss={row['loss']:.4f} "
+                          f"mse={row['mse']:.4f} rank={row['rank']:.4f}")
+        return cls(params, norm, dataset.feature_version), history
+
+    # -- inference -----------------------------------------------------------
+
+    def predict_log(self, X: np.ndarray) -> np.ndarray:
+        """Predicted log-cycles for raw (unnormalized) feature rows."""
+        X = np.asarray(X, np.float32)
+        if X.ndim == 1:
+            X = X[None, :]
+        xn = (X - self.norm["mu"]) / self.norm["sigma"]
+        pred = CostModel.apply(self.params, jnp.asarray(xn))
+        return (np.asarray(pred) * float(self.norm["ystd"])
+                + float(self.norm["ymu"]))
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        """Predicted cycles (exp of the log head)."""
+        return np.exp(self.predict_log(X))
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        arrays = {f"param_{k}": np.asarray(v)
+                  for k, v in self.params.items()}
+        arrays.update({f"norm_{k}": np.asarray(v)
+                       for k, v in self.norm.items()})
+        np.savez(path, format=MODEL_FORMAT, version=MODEL_VERSION,
+                 feature_version=self.feature_version, **arrays)
+
+    @classmethod
+    def load(cls, path: str) -> "CostModel":
+        try:
+            with np.load(path, allow_pickle=False) as z:
+                if "format" not in z.files \
+                        or str(z["format"]) != MODEL_FORMAT:
+                    raise CostModelVersionError(
+                        f"{path} is not a {MODEL_FORMAT} file")
+                version = int(z["version"])
+                if version not in _KNOWN_MODEL_VERSIONS:
+                    raise CostModelVersionError(
+                        f"cost model {path} has version {version!r}; this "
+                        f"build reads {_KNOWN_MODEL_VERSIONS}")
+                params = {k[len("param_"):]: jnp.asarray(z[k])
+                          for k in z.files if k.startswith("param_")}
+                norm = {k[len("norm_"):]: z[k]
+                        for k in z.files if k.startswith("norm_")}
+                return cls(params, norm, int(z["feature_version"]))
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile) as e:
+            raise CostModelVersionError(
+                f"corrupt cost model {path}: {e}") from e

@@ -140,6 +140,11 @@ def main() -> None:
     ap.add_argument("--strict", action="store_true",
                     help="legacy fail-fast: the first failing cell aborts "
                          "the campaign (no failure ledger, no supervision)")
+    ap.add_argument("--memo-stats", action="store_true",
+                    help="print the shared memo's full counters "
+                         "(entries/hits/misses/cross-kernel/evictions) in "
+                         "the end-of-campaign output — the cost-model "
+                         "corpus growth per run")
     ap.add_argument("--strict-memo", action="store_true",
                     help="die on a corrupt --memo-dir payload instead of "
                          "quarantining it and warm-starting empty")
@@ -257,6 +262,12 @@ def main() -> None:
         print(f"[optimize] backend health: {session.backend.summary()}")
     if session.memo is not None:
         print(f"[optimize] shared memo: {session.memo.summary()}")
+        if args.memo_stats:
+            s = session.memo.stats()
+            print(f"[optimize] memo stats: {s['entries']} entries over "
+                  f"{s['programs']} programs, {s['hits']} hits / "
+                  f"{s['misses']} misses, {s['cross_kernel_hits']} "
+                  f"cross-kernel hits, {s['evictions']} evictions")
         if memo_path is not None:
             n = session.memo.save(memo_path)
             print(f"[optimize] saved memo to {memo_path} ({n} entries)")

@@ -35,7 +35,8 @@ from __future__ import annotations
 import os
 import pickle
 import threading
-from typing import Callable, Dict, Optional, Protocol, Sequence, runtime_checkable
+from typing import (Callable, Dict, Iterator, NamedTuple, Optional, Protocol,
+                    Sequence, runtime_checkable)
 
 import numpy as np
 
@@ -62,6 +63,16 @@ class MemoVersionError(RuntimeError):
 # ---------------------------------------------------------------------------
 # cross-kernel measurement memo
 # ---------------------------------------------------------------------------
+
+class MemoEntry(NamedTuple):
+    """One exported measurement: which program (by interned fingerprint and
+    its timing-record sequence), which schedule (position -> identity
+    permutation), and the measured cycles."""
+    fingerprint: int
+    records: tuple
+    permutation: Optional[np.ndarray]   # None for non-permutation keys
+    cycles: float
+    writer: str
 
 class _MemoView:
     """Dict-like view of a :class:`SharedMeasureMemo` for one program.
@@ -170,6 +181,29 @@ class SharedMeasureMemo:
 
     def __len__(self) -> int:
         return len(self._data)
+
+    def export_entries(self) -> Iterator[MemoEntry]:
+        """Iterate every *resident* measurement as a :class:`MemoEntry` —
+        the public export hook the cost-model dataset builder consumes, so
+        nothing outside this module reaches into ``_data`` / ``_fp_ids``.
+
+        Permutation keys (the game's ``id_at.tobytes()`` and the one-shot
+        ``np.arange`` keys) decode back to int64 arrays; any other key
+        shape exports with ``permutation=None``.  Eviction caveat: the memo
+        bounds resident memory by dropping its oldest entries, so evicted
+        measurements are simply **absent** from exports — an export is a
+        snapshot of what is currently resident, not a full measurement log.
+        """
+        with self._lock:
+            recs_of = {fp: recs for recs, fp in self._fp_ids.items()}
+        for (fp, key), (cycles, writer) in list(self._data.items()):
+            recs = recs_of.get(fp)
+            if recs is None:
+                continue
+            perm = None
+            if isinstance(key, bytes) and len(key) % 8 == 0:
+                perm = np.frombuffer(key, dtype=np.int64).copy()
+            yield MemoEntry(fp, recs, perm, cycles, writer)
 
     # -- persistence (fleet warm-starts across campaigns) -------------------
 

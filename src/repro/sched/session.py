@@ -277,19 +277,34 @@ class RandomSearchStrategy:
             best_cycles=env.best_cycles, baseline_cycles=env.t0, stats=stats)
 
 
+# values are classes, or "module:Class" strings resolved lazily — the
+# model-guided strategies live in repro.costmodel.search, which imports
+# SearchOutcome from this module, so eager registration would be an
+# import cycle
 STRATEGIES = {
     "ppo": PPOStrategy,
     "greedy": GreedySwapStrategy,
     "random": RandomSearchStrategy,
+    "beam": "repro.costmodel.search:BeamSearchStrategy",
+    "lookahead": "repro.costmodel.search:GreedyLookaheadStrategy",
 }
 
 
-def make_strategy(name: str, **kwargs) -> SearchStrategy:
+def _strategy_cls(name: str):
     try:
         cls = STRATEGIES[name]
     except KeyError:
         raise KeyError(f"unknown strategy {name!r}; one of {sorted(STRATEGIES)}")
-    return cls(**kwargs)
+    if isinstance(cls, str):
+        import importlib
+        mod_name, _, cls_name = cls.partition(":")
+        cls = getattr(importlib.import_module(mod_name), cls_name)
+        STRATEGIES[name] = cls            # resolve once
+    return cls
+
+
+def make_strategy(name: str, **kwargs) -> SearchStrategy:
+    return _strategy_cls(name)(**kwargs)
 
 
 def make_budgeted_strategy(name: str, timesteps: int = 8192,
@@ -312,6 +327,15 @@ def make_budgeted_strategy(name: str, timesteps: int = 8192,
         return RandomSearchStrategy(
             episodes=max(1, timesteps // max(episode_length, 1)),
             episode_length=episode_length)
+    if name == "beam":
+        # CLI beam defaults to the oracle ranker (no trained model on
+        # hand); the timestep budget caps real measurements
+        return make_strategy(name, depth=episode_length,
+                             max_measurements=timesteps)
+    if name == "lookahead":
+        return make_strategy(name, ranker="oracle",
+                             max_steps=episode_length,
+                             max_measurements=timesteps)
     return make_strategy(name)
 
 

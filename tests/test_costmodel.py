@@ -1,0 +1,249 @@
+"""Learned cost-model subsystem tests: memo export, dataset build /
+serialization, featurizer, model training, env reordering primitives,
+lazy strategy registration, and the headline acceptance criteria
+(held-out Spearman >= 0.8; beam-cost matching greedy's best cycles on
+<= 25% of its real measurements)."""
+
+import numpy as np
+import pytest
+
+from repro.core.env import AssemblyGame
+from repro.costmodel import (CostDataset, CostModel, CostModelVersionError,
+                             ProgramFeaturizer, evaluate_strategies)
+from repro.costmodel.dataset import FEATURE_DIM
+from repro.sched.backends import FastTimingBackend
+from repro.sched.session import (STRATEGIES, GreedySwapStrategy,
+                                 make_budgeted_strategy, make_strategy)
+
+KERNEL = "matmul_leakyrelu"
+
+
+@pytest.fixture(scope="module")
+def warm_backend(stall_db, kernel_programs):
+    """A FastTimingBackend whose memo holds a greedy run's measurements."""
+    backend = FastTimingBackend()
+    GreedySwapStrategy(max_steps=8).search(
+        kernel_programs[KERNEL], stall_db=stall_db, backend=backend,
+        owner=KERNEL)
+    return backend
+
+
+@pytest.fixture(scope="module")
+def warm_dataset(warm_backend, stall_db, kernel_programs):
+    return CostDataset.from_memo(
+        warm_backend.memo, {KERNEL: kernel_programs[KERNEL]},
+        stall_db=stall_db)
+
+
+# ---------------------------------------------------------------------------
+# memo export
+# ---------------------------------------------------------------------------
+
+def test_export_entries_roundtrip(warm_backend, kernel_programs):
+    memo = warm_backend.memo
+    entries = list(memo.export_entries())
+    assert len(entries) == memo.stats()["entries"] > 0
+    n = len(kernel_programs[KERNEL])
+    for e in entries:
+        assert e.cycles > 0
+        assert e.writer == KERNEL
+        if e.permutation is not None:
+            assert sorted(e.permutation.tolist()) == list(range(n))
+    # at least one non-root schedule came through with its permutation
+    assert sum(e.permutation is not None for e in entries) > 1
+
+
+# ---------------------------------------------------------------------------
+# featurizer
+# ---------------------------------------------------------------------------
+
+def test_featurizer_is_order_sensitive(stall_db, kernel_programs):
+    prog = kernel_programs[KERNEL]
+    fz = ProgramFeaturizer(prog, stall_db=stall_db)
+    env = AssemblyGame(prog, stall_db=stall_db, episode_length=4)
+    root = env.id_at.copy()
+    q = env.action_swap_pos(env.valid_actions()[0])
+    child = root.copy()
+    child[q - 1], child[q] = child[q], child[q - 1]
+    a, b = fz.features(root), fz.features(child)
+    assert a.shape == (FEATURE_DIM,)
+    assert not np.array_equal(a, b)
+    # features_many stacks the same vectors
+    many = fz.features_many([root, child])
+    np.testing.assert_array_equal(many[0], a)
+    np.testing.assert_array_equal(many[1], b)
+    # and is deterministic
+    np.testing.assert_array_equal(a, fz.features(root))
+
+
+# ---------------------------------------------------------------------------
+# dataset
+# ---------------------------------------------------------------------------
+
+def test_dataset_build_is_deterministic(warm_backend, stall_db,
+                                        kernel_programs, warm_dataset):
+    again = CostDataset.from_memo(
+        warm_backend.memo, {KERNEL: kernel_programs[KERNEL]},
+        stall_db=stall_db)
+    np.testing.assert_array_equal(warm_dataset.X, again.X)
+    np.testing.assert_array_equal(warm_dataset.y, again.y)
+    np.testing.assert_array_equal(warm_dataset.group, again.group)
+    np.testing.assert_array_equal(warm_dataset.split, again.split)
+
+
+def test_dataset_split_no_leak(warm_backend, warm_dataset):
+    from repro.costmodel.dataset import _split_of
+    ds = warm_dataset
+    assert len(ds) > 20
+    tr, ev = ds.train, ds.eval
+    assert len(tr) + len(ev) == len(ds)
+    assert len(tr) > 0 and len(ev) > 0
+    for entry in warm_backend.memo.export_entries():
+        if entry.permutation is None:
+            continue
+        # the split is a pure function of the schedule's identity (its
+        # timing records + permutation) — no dataset-composition leak...
+        s = _split_of(entry.records, entry.permutation, 0.25)
+        assert s == _split_of(entry.records, entry.permutation, 0.25)
+        # ...and widening eval_fraction only ever grows the eval side
+        if s == 1:
+            assert _split_of(entry.records, entry.permutation, 0.5) == 1
+        else:
+            assert _split_of(entry.records, entry.permutation, 0.1) == 0
+
+
+def test_dataset_save_load_roundtrip(tmp_path, warm_dataset):
+    path = str(tmp_path / "ds.npz")
+    n = warm_dataset.save(path)
+    assert n == len(warm_dataset)
+    back = CostDataset.load(path)
+    np.testing.assert_array_equal(warm_dataset.X, back.X)
+    np.testing.assert_array_equal(warm_dataset.y, back.y)
+    np.testing.assert_array_equal(warm_dataset.split, back.split)
+    assert back.feature_version == warm_dataset.feature_version
+
+
+def test_dataset_load_rejects_foreign_npz(tmp_path):
+    path = str(tmp_path / "other.npz")
+    np.savez(path, X=np.zeros((2, 3)), y=np.zeros(2))
+    with pytest.raises(CostModelVersionError):
+        CostDataset.load(path)
+
+
+def test_dataset_load_rejects_garbage(tmp_path):
+    path = str(tmp_path / "junk.npz")
+    with open(path, "wb") as f:
+        f.write(b"not an npz payload")
+    with pytest.raises(CostModelVersionError):
+        CostDataset.load(path)
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def test_model_fit_is_bit_reproducible(warm_dataset):
+    m1, h1 = CostModel.fit(warm_dataset, steps=60, seed=3)
+    m2, h2 = CostModel.fit(warm_dataset, steps=60, seed=3)
+    for k in m1.params:
+        np.testing.assert_array_equal(np.asarray(m1.params[k]),
+                                      np.asarray(m2.params[k]))
+    assert h1 == h2
+    # a different seed trains a different model
+    m3, _ = CostModel.fit(warm_dataset, steps=60, seed=4)
+    assert any(not np.array_equal(np.asarray(m1.params[k]),
+                                  np.asarray(m3.params[k]))
+               for k in m1.params)
+
+
+def test_model_save_load_roundtrip(tmp_path, warm_dataset):
+    model, _ = CostModel.fit(warm_dataset, steps=60, seed=0)
+    path = str(tmp_path / "model.npz")
+    model.save(path)
+    back = CostModel.load(path)
+    X = warm_dataset.X[:16]
+    np.testing.assert_allclose(model.predict_log(X), back.predict_log(X),
+                               rtol=1e-6)
+    assert back.feature_version == model.feature_version
+
+
+def test_model_load_rejects_foreign_npz(tmp_path):
+    path = str(tmp_path / "other.npz")
+    np.savez(path, w0=np.zeros((3, 3)))
+    with pytest.raises(CostModelVersionError):
+        CostModel.load(path)
+
+
+# ---------------------------------------------------------------------------
+# env reordering primitives the search strategies lean on
+# ---------------------------------------------------------------------------
+
+def test_set_order_measure_matches_probe(stall_db, kernel_programs):
+    prog = kernel_programs[KERNEL]
+    env = AssemblyGame(prog, stall_db=stall_db, episode_length=8)
+    root = env.id_at.copy()
+    q = env.action_swap_pos(env.valid_actions()[0])
+    probed = env.probe_swap(q)
+    child = root.copy()
+    child[q - 1], child[q] = child[q], child[q - 1]
+    env.set_order(child)
+    assert env.measure_schedule() == probed
+    np.testing.assert_array_equal(env.id_at, child)
+    # and back: the root re-measures to the baseline
+    env.set_order(root)
+    assert env.measure_schedule() == env.t0
+
+
+def test_set_order_rejects_non_permutation(stall_db, kernel_programs):
+    env = AssemblyGame(kernel_programs[KERNEL], stall_db=stall_db,
+                       episode_length=4)
+    bad = env.id_at.copy()
+    bad[0] = bad[1]
+    with pytest.raises(ValueError):
+        env.set_order(bad)
+
+
+# ---------------------------------------------------------------------------
+# lazy strategy registration
+# ---------------------------------------------------------------------------
+
+def test_strategies_registry_resolves_lazily():
+    assert "beam" in STRATEGIES and "lookahead" in STRATEGIES
+    beam = make_strategy("beam", width=2, depth=4, max_measurements=8)
+    assert type(beam).__name__ == "BeamSearchStrategy"
+    assert beam.name == "beam-oracle"
+    la = make_strategy("lookahead", lookahead=2)
+    assert type(la).__name__ == "GreedyLookaheadStrategy"
+    # after first resolution the registry holds the class itself
+    assert not isinstance(STRATEGIES["beam"], str)
+
+
+def test_make_budgeted_strategy_guided(stall_db, kernel_programs):
+    beam = make_budgeted_strategy("beam", timesteps=16, episode_length=4)
+    assert beam.max_measurements == 16 and beam.depth == 4
+    backend = FastTimingBackend()
+    out = beam.search(kernel_programs["bmm"], stall_db=stall_db,
+                      backend=backend, owner="bmm")
+    assert out.best_cycles <= out.baseline_cycles
+    assert backend.memo.stats()["misses"] <= 16 + 1   # root + capped sweep
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the subsystem's headline numbers (fixed seed)
+# ---------------------------------------------------------------------------
+
+def test_acceptance_spearman_and_guided_budget(stall_db):
+    result = evaluate_strategies(
+        strategies=("ppo", "greedy", "beam-cost"), budget=512, seed=0,
+        train_steps=1500, stall_db=stall_db)
+    # memo-trained model ranks held-out schedules with the oracle
+    assert result["rank_correlation"] >= 0.8
+    rows = {(r["strategy"], r["kernel"]): r for r in result["rows"]}
+    for kernel in ("matmul_leakyrelu", "bmm"):
+        greedy = rows[("greedy", kernel)]
+        beam = rows[("beam-cost", kernel)]
+        # verified best: beam-cost reaches greedy's best cycles...
+        assert beam["best_cycles"] <= greedy["best_cycles"]
+        # ...spending at most a quarter of greedy's real measurements
+        assert beam["measurements"] <= 0.25 * greedy["measurements"]
+        assert beam["measurements"] > 0

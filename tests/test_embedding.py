@@ -1,0 +1,77 @@
+"""State-embedding unit tests (paper §3.4): feature-dim consistency,
+padding / validity invariants, determinism, and the overflow guard."""
+
+import numpy as np
+import pytest
+
+from repro.core import embedding
+from repro.core.analysis import analyze
+from repro.core.isa import NUM_SEMAPHORES
+
+
+@pytest.fixture(scope="module")
+def cases(stall_db, kernel_programs):
+    """(name, program, analysis) for two structurally different kernels."""
+    out = []
+    for name in ("matmul_leakyrelu", "rmsnorm"):
+        prog = kernel_programs[name]
+        out.append((name, prog, analyze(prog, stall_db)))
+    return out
+
+
+def test_fixed_features_matches_row_layout():
+    # valid + wait bits + read/write bar + yield + stall + is_mem + pred
+    assert embedding.FIXED_FEATURES == 1 + NUM_SEMAPHORES + 2 + 1 + 1 + 1 + 1
+    assert embedding.fixed_feature_dim() == embedding.FIXED_FEATURES
+
+
+def test_feature_dim_consistency(cases):
+    for name, prog, analysis in cases:
+        f = embedding.feature_dim(analysis)
+        assert f == embedding.FIXED_FEATURES + analysis.max_operands
+        row = embedding.embed_instruction(prog[0], analysis)
+        assert row.shape == (f,)
+        mat = embedding.embed_program(prog, analysis)
+        assert mat.shape == (len(prog), f)
+        assert mat.dtype == np.float32
+
+
+def test_fixed_prefix_is_kernel_independent(cases):
+    # the aggregate featurizer (repro.costmodel.dataset) leans on exactly
+    # this: the first FIXED_FEATURES columns mean the same thing for every
+    # kernel even though the full row width differs
+    for _, prog, analysis in cases:
+        mat = embedding.embed_program(prog, analysis)
+        fixed = mat[:, :embedding.FIXED_FEATURES]
+        assert np.all(fixed[:, 0] == 1.0)                     # valid
+        wait = fixed[:, 1:1 + NUM_SEMAPHORES]
+        assert set(np.unique(wait)) <= {0.0, 1.0}             # wait bits
+        assert np.all(fixed[:, 1 + NUM_SEMAPHORES:3 + NUM_SEMAPHORES] >= -1)
+        assert np.all(fixed[:, 4 + NUM_SEMAPHORES] >= 0)      # stall / 16
+        assert set(np.unique(fixed[:, 5 + NUM_SEMAPHORES])) <= {-1.0, 1.0}
+
+
+def test_padding_rows_are_invalid(cases):
+    _, prog, analysis = cases[0]
+    n, rows = len(prog), len(prog) + 7
+    mat = embedding.embed_program(prog, analysis, n_rows=rows)
+    assert mat.shape == (rows, embedding.feature_dim(analysis))
+    assert np.all(mat[:n, 0] == 1.0)        # real rows marked valid
+    assert np.all(mat[n:, 0] == 0.0)        # padding rows marked invalid
+    assert np.all(mat[n:, 1:] == -1.0)      # padding features are the fill
+    # padding does not disturb the real rows
+    np.testing.assert_array_equal(mat[:n], embedding.embed_program(
+        prog, analysis))
+
+
+def test_embedding_is_deterministic(cases):
+    for _, prog, analysis in cases:
+        a = embedding.embed_program(prog, analysis, n_rows=len(prog) + 3)
+        b = embedding.embed_program(prog, analysis, n_rows=len(prog) + 3)
+        np.testing.assert_array_equal(a, b)
+
+
+def test_program_longer_than_rows_raises(cases):
+    _, prog, analysis = cases[0]
+    with pytest.raises(ValueError, match="longer than"):
+        embedding.embed_program(prog, analysis, n_rows=len(prog) - 1)

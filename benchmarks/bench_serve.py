@@ -13,9 +13,18 @@ TTFT, stall/preemption counts.  The suite asserts the continuous-batching
 acceptance criterion: at the saturating QPS point, continuous admission
 beats gang admission on delivered tokens/s.  In the CI ``--fast`` smoke
 set, so the numbers land in ``BENCH_ci.json`` every run.
+
+The ``serve_paged`` cell drains the same seeded shared-prefix burst
+(loadgen ``prefix_tokens``) through the paged engine and the dense-slot
+engine at a *fixed* ``kv_blocks`` budget, recording delivered tokens/s,
+peak KV bytes, and the concurrency high-water mark.  Acceptance: with
+prefix sharing the paged engine must keep at least 2x the dense
+engine's concurrent sequences resident on the same block budget.  Pool
+invariants (``KVBlockPool.check``) run every tick of this cell.
 """
 
 import tempfile
+import time
 
 import jax
 
@@ -25,7 +34,8 @@ from repro.core import build_stall_table
 from repro.models import lm
 from repro.sched import OptimizationSession, make_budgeted_strategy
 from repro.sched.session import OptimizeRequest
-from repro.serve import ServeEngine, Tenant, TrafficConfig, run_load
+from repro.serve import (ServeEngine, Tenant, TrafficConfig, poisson_trace,
+                         run_load)
 
 ARCH = "qwen1.5-4b"
 QPS_SWEEP = (4.0, 256.0)         # trickle vs saturating offered load
@@ -53,6 +63,66 @@ def _mean_plan_speedup(engine) -> float:
     if not arts:
         return 1.0
     return sum(a.speedup for a in arts) / len(arts)
+
+
+# Paged-vs-dense capacity cell: a shared-system-prompt burst on a tight
+# fixed block budget.  Dense slots must hold every request's whole prompt
+# privately; paged slots share the 3 prefix blocks and add ~1 private
+# block per request.
+PAGED_PREFIX = 24                # 3 full blocks at block_size=8
+PAGED_KV_BLOCKS = 8
+PAGED_BURST = 12
+
+
+def _paged_capacity_cell(cfg, params):
+    traffic = TrafficConfig(
+        qps=1000.0, n_requests=PAGED_BURST, n_tenants=1,
+        prompt_len=(2, 4), output_len=(4, 8), vocab=cfg.vocab, seed=11,
+        prefix_tokens=PAGED_PREFIX, prefix_groups=1)
+    burst = poisson_trace(traffic, ["t0"])
+    warm_prompt = burst[0].prompt[:PAGED_PREFIX + 1]
+
+    rows, cells = [], {}
+    for paged in (True, False):
+        engine = ServeEngine.from_config(
+            cfg, params=params, max_batch=8, max_seq=MAX_SEQ, block_size=8,
+            kv_blocks=PAGED_KV_BLOCKS, tenants=[Tenant("t0")], paged=paged,
+            debug_invariants=True)
+        # Warm the prefix cache the way a real deployment does: one
+        # resident request whose prefill registers the system prompt,
+        # then the burst admits against it.
+        warm = engine.submit(warm_prompt, 8, tenant="t0")
+        for _ in range(200):
+            if warm.first_token_time is not None:
+                break
+            engine.step()
+        assert warm.first_token_time is not None, "warm-up never prefilled"
+        reqs = [engine.submit(a.prompt, a.max_new_tokens, tenant="t0")
+                for a in burst]
+        t0 = time.monotonic()
+        engine.run(max_steps=20_000)
+        wall = time.monotonic() - t0
+        assert all(r.done for r in reqs)
+        eng = engine.stats()["engine"]
+        toks = sum(len(r.output) for r in reqs)
+        cells[paged] = eng
+        rows.append((
+            "serve_paged", ARCH, "paged" if paged else "dense",
+            PAGED_KV_BLOCKS, PAGED_BURST, PAGED_PREFIX,
+            round(toks / wall, 2), toks, eng["max_active"],
+            eng["peak_kv_bytes"], eng["kv_bytes_allocated"],
+            eng["passes"], eng["stalls"], eng["preemptions"],
+            eng["prefix_hits"], eng["cow_forks"], eng["preempt_spills"]))
+
+    ratio = cells[True]["max_active"] / max(1, cells[False]["max_active"])
+    print(f"# paged capacity: {cells[True]['max_active']} vs dense "
+          f"{cells[False]['max_active']} concurrent seqs at "
+          f"{PAGED_KV_BLOCKS} blocks ({ratio:.1f}x)")
+    assert cells[True]["max_active"] >= 2 * cells[False]["max_active"], (
+        f"paged engine admitted {cells[True]['max_active']} concurrent "
+        f"sequences vs dense {cells[False]['max_active']} on "
+        f"{PAGED_KV_BLOCKS} blocks — expected >= 2x")
+    return rows
 
 
 def run(timesteps: int = 48):
@@ -109,4 +179,12 @@ def run(timesteps: int = 48):
                        "latency_p99_ms", "ttft_p50_ms", "plan_speedup",
                        "modeled_tokens_per_s", "stalls", "preemptions",
                        "lane_utilization"))
-    return rows
+
+    paged_rows = _paged_capacity_cell(cfg, params)
+    emit(paged_rows, header=("bench", "arch", "kv", "kv_blocks", "n_requests",
+                             "prefix_tokens", "tokens_per_s", "tokens",
+                             "max_active", "peak_kv_bytes",
+                             "kv_bytes_allocated", "passes", "stalls",
+                             "preemptions", "prefix_hits", "cow_forks",
+                             "preempt_spills"))
+    return rows + paged_rows

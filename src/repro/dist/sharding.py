@@ -269,15 +269,38 @@ def decode_cache_shardings(cfg, caches, mesh):
     return jax.tree.map(lambda x: NamedSharding(mesh, leaf_spec(x)), caches)
 
 
-def kv_pool_shardings(cfg, caches, mesh):
-    """Placement for the serve engine's slot-pooled KV cache.
+def kv_pool_shardings(cfg, caches, mesh, kinds=None):
+    """Placement for the serve engine's KV cache (dense or paged).
 
-    The pool's backing arrays are the decode caches with the slot
-    dimension in the batch position (``max_batch + 1`` rows: the slots
-    plus the scratch row the padded step writes), so they place under
-    exactly the decode-cache rules — slot rows across data axes when
-    divisible, KV heads across the model axis for GQA, sequence for
-    MQA/long-context, latent/conv leaves by their own rules.  Kept as a
-    named entry point so the engine states its placement contract
-    explicitly rather than borrowing a train-path helper."""
-    return decode_cache_shardings(cfg, caches, mesh)
+    **Dense** (``kinds=None``): the pool's backing arrays are the decode
+    caches with the slot dimension in the batch position
+    (``max_batch + 1`` rows: the slots plus the scratch row the padded
+    step writes), so they place under exactly the decode-cache rules —
+    slot rows across data axes when divisible, KV heads across the model
+    axis for GQA, sequence for MQA/long-context, latent/conv leaves by
+    their own rules.
+
+    **Paged** (``kinds`` = ``serve.decode.paged_cache_kinds(cfg)``, one
+    entry per cache in the list): block-major page leaves
+    ``(num_blocks, block_size, ...)`` shard KV heads over the model axis
+    and NEVER shard the block or in-block position dims — every lane
+    gathers arbitrary physical blocks through its table, so a sharded
+    block dim would turn each gather into an all-to-all.  MLA latent
+    pages replicate their trailing dim (it is the attention contraction
+    — same rule as the dense path).  ``"slot"`` entries (recurrent state
+    rows) keep the decode-cache rules."""
+    if kinds is None:
+        return decode_cache_shardings(cfg, caches, mesh)
+
+    def paged_leaf_spec(x) -> P:
+        shape = x.shape
+        if len(shape) == 4 and shape[2] == cfg.n_kv_heads \
+                and shape[3] == cfg.head_dim:
+            h_ax = "model" if cfg.n_kv_heads % model_size(mesh) == 0 else None
+            return P(None, None, h_ax, None)
+        return P(*([None] * len(shape)))
+
+    return [decode_cache_shardings(cfg, c, mesh) if kind == "slot"
+            else jax.tree.map(
+                lambda x: NamedSharding(mesh, paged_leaf_spec(x)), c)
+            for c, kind in zip(caches, kinds)]

@@ -61,6 +61,7 @@ def _engine_mode(args, cfg) -> None:
         cfg, params=params, max_batch=args.max_batch, max_seq=max_seq,
         block_size=args.block_size, kv_blocks=args.kv_blocks,
         tenants=tenants, schedule_cache=args.schedule_cache,
+        paged=args.paged, debug_invariants=args.debug_invariants,
         on_missing="raise" if args.strict_schedules else "baseline")
     _print_plan(engine)
     if engine.counters.get("schedule_fallbacks"):
@@ -72,10 +73,14 @@ def _engine_mode(args, cfg) -> None:
         qps=args.qps, n_requests=args.requests, n_tenants=args.tenants,
         prompt_len=(max(2, args.prompt_len // 2), args.prompt_len),
         output_len=(max(1, args.new_tokens // 2), args.new_tokens),
-        vocab=cfg.vocab, seed=0)
+        vocab=cfg.vocab, seed=0,
+        prefix_tokens=args.prefix_tokens, prefix_groups=args.prefix_groups)
     print(f"[serve] {args.arch}: {args.requests} requests @ {args.qps} qps, "
           f"{args.tenants} tenants, max_batch={args.max_batch}, "
-          f"max_seq={max_seq}, kv_blocks={engine.pool.num_blocks}")
+          f"max_seq={max_seq}, kv_blocks={engine.pool.num_blocks}, "
+          f"kv={'paged' if engine.paged else 'dense slots'}"
+          + (f", shared prefix {args.prefix_tokens} tokens x "
+             f"{args.prefix_groups} groups" if args.prefix_tokens else ""))
     report = run_load(engine, traffic)
     print(f"[serve] tokens/s {report['tokens_per_s']:.1f}  "
           f"p50 {report['latency_p50_s'] * 1e3:.1f}ms  "
@@ -87,6 +92,16 @@ def _engine_mode(args, cfg) -> None:
     print(f"[serve] engine: {eng['passes']} passes, lane utilization "
           f"{eng['lane_utilization']:.2f}, {eng['stalls']} stalls, "
           f"{eng['preemptions']} preemptions")
+    if engine.paged:
+        pool = report["stats"]["pool"]
+        print(f"[serve] paged kv: max_active {eng['max_active']}, "
+              f"prefix hits {eng['prefix_hits']} "
+              f"({pool['shared_tokens_reused']} tokens reused), "
+              f"cow forks {eng['cow_forks']}, "
+              f"spills {eng['preempt_spills']}, "
+              f"high water {pool['high_water_blocks']}/"
+              f"{engine.pool.num_blocks} blocks, "
+              f"peak kv {engine.peak_kv_bytes() / 1e6:.1f} MB")
     _print_fairness(engine)
 
 
@@ -152,6 +167,19 @@ def main() -> None:
                     help="KV pool block granularity (tokens)")
     ap.add_argument("--requests", type=int, default=32,
                     help="trace length for the load generator")
+    ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="paged KV: block-table indirection with prefix "
+                         "sharing and copy-free preemption (default on; "
+                         "--no-paged restores the dense per-slot cache)")
+    ap.add_argument("--prefix-tokens", type=int, default=0,
+                    help="prepend a shared system prompt of this many tokens "
+                         "to every request (Zipf-distributed over "
+                         "--prefix-groups distinct prefixes)")
+    ap.add_argument("--prefix-groups", type=int, default=4,
+                    help="distinct shared prefixes for --prefix-tokens")
+    ap.add_argument("--debug-invariants", action="store_true",
+                    help="run KVBlockPool.check() every engine tick")
     # shared with legacy static mode
     ap.add_argument("--batch", type=int, default=4,
                     help="[deprecated static path] batch rows")

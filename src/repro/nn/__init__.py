@@ -1,8 +1,11 @@
 """Pure-JAX NN substrate (no flax): params-as-pytrees + (init, apply)."""
 
 from repro.nn.attention import (NO_WINDOW, chunked_attention,
-                                decode_attention, gqa_spec, out_project,
-                                qkv_project, update_cache)
+                                decode_attention, gather_page_window,
+                                gather_pages, gqa_spec,
+                                masked_decode_attention, out_project,
+                                paged_decode_attention, paged_flat_index,
+                                paged_update_cache, qkv_project, update_cache)
 from repro.nn.core import (ParamSpec, apply_dense, dense, init_params,
                            logical_axes, stack_specs)
 from repro.nn.layers import (apply_embedding, apply_gelu_mlp, apply_layernorm,
@@ -10,7 +13,8 @@ from repro.nn.layers import (apply_embedding, apply_gelu_mlp, apply_layernorm,
                              embedding_spec, gelu_mlp_spec, layernorm_spec,
                              lm_head_spec, rmsnorm_spec, swiglu_spec, unembed)
 from repro.nn.mla import (MLAConfig, apply_mla, apply_mla_decode,
-                          init_mla_cache, mla_spec)
+                          apply_mla_paged_decode, init_mla_cache,
+                          init_paged_mla_cache, mla_spec)
 from repro.nn.moe import MoEConfig, apply_moe, apply_moe_dense, moe_spec
 from repro.nn.rope import apply_rope
 from repro.nn.ssm import (SSMConfig, apply_ssm, apply_ssm_decode,

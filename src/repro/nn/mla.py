@@ -14,7 +14,8 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.nn.attention import chunked_attention
+from repro.nn.attention import (chunked_attention, gather_pages,
+                                paged_update_cache)
 from repro.nn.core import ParamSpec, apply_dense, dense
 from repro.nn.layers import apply_rmsnorm, rmsnorm_spec
 from repro.nn.rope import apply_rope
@@ -130,24 +131,76 @@ def apply_mla_decode(p: Dict, x: jax.Array, cache: Dict, pos,
                 cache["k_rope"], kr_new.astype(cache["k_rope"].dtype),
                 (zero, pos32, zero)),
         }
-    q_nope, q_rope = _queries(p, x, cfg, positions)   # (B,1,H,*)
-    # absorb W_uk into the query: q_lat (B,1,H,R)
-    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
-                       p["w_uk"].astype(jnp.float32))
-    s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat,
-                       cache["c_kv"].astype(jnp.float32))
-    s_rope = jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
-                        cache["k_rope"].astype(jnp.float32))
-    s = (s_lat + s_rope) * (cfg.qk_dim ** -0.5)
     k_pos = jnp.arange(cache["c_kv"].shape[1])
     if ragged:
         mask = (k_pos[None] <= positions)[:, None, None, :]   # (B,1,1,S)
     else:
         mask = (k_pos <= pos)[None, None, None]
+    o = _latent_attention(p, x, cfg, positions,
+                          cache["c_kv"], cache["k_rope"], mask)
+    return apply_dense(p["wo"], o), cache
+
+
+def _latent_attention(p: Dict, x: jax.Array, cfg: MLAConfig,
+                      positions: jax.Array, c_kv: jax.Array,
+                      k_rope: jax.Array, mask: jax.Array) -> jax.Array:
+    """Weight-absorbed latent attention over a (gathered) latent cache.
+
+    Shared by the dense slot path and the paged block-table path — with
+    identical ``(c_kv, k_rope, mask)`` operands the outputs are
+    bit-identical, which is what makes paged MLA serving exact."""
+    B = x.shape[0]
+    q_nope, q_rope = _queries(p, x, cfg, positions)   # (B,1,H,*)
+    # absorb W_uk into the query: q_lat (B,1,H,R)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       p["w_uk"].astype(jnp.float32))
+    s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat, c_kv.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                        k_rope.astype(jnp.float32))
+    s = (s_lat + s_rope) * (cfg.qk_dim ** -0.5)
     s = jnp.where(mask, s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhqs,bsr->bqhr", w,
-                       cache["c_kv"].astype(jnp.float32))   # latent values
+                       c_kv.astype(jnp.float32))             # latent values
     o = jnp.einsum("bqhr,rhd->bqhd", o_lat, p["w_uv"].astype(jnp.float32))
-    o = o.reshape(B, 1, -1).astype(x.dtype)
+    return o.reshape(B, 1, -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# paged decode: the latent cache as physical pages behind a block table
+# ---------------------------------------------------------------------------
+
+def init_paged_mla_cache(cfg: MLAConfig, num_blocks: int, block_size: int,
+                         dtype=jnp.bfloat16) -> Dict:
+    """Block-major latent cache: pages shared by every request, addressed
+    through per-request block tables (see ``nn.attention`` paged helpers)."""
+    return {
+        "c_kv": jnp.zeros((num_blocks, block_size, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((num_blocks, block_size, cfg.qk_rope_dim), dtype),
+    }
+
+
+def apply_mla_paged_decode(p: Dict, x: jax.Array, cache: Dict,
+                           block_table: jax.Array, pos, cfg: MLAConfig, *,
+                           width: int,
+                           write_mask=None) -> Tuple[jax.Array, Dict]:
+    """One-token MLA step against the paged latent cache.
+
+    ``pos`` is (B,) ragged per-row positions; ``width`` (static) is the
+    gather width — the dense layer's ``max_seq`` — so the attention
+    operands, and hence the outputs, are bit-identical to
+    :func:`apply_mla_decode` on the equivalent dense cache."""
+    pos32 = jnp.asarray(pos, jnp.int32)
+    positions = pos32[:, None]
+    c_new, kr_new = _latent(p, x, cfg, positions)
+    cache = {
+        "c_kv": paged_update_cache(cache["c_kv"], c_new, block_table, pos32,
+                                   write_mask=write_mask),
+        "k_rope": paged_update_cache(cache["k_rope"], kr_new, block_table,
+                                     pos32, write_mask=write_mask),
+    }
+    c_g = gather_pages(cache["c_kv"], block_table, width)
+    kr_g = gather_pages(cache["k_rope"], block_table, width)
+    mask = (jnp.arange(width)[None] <= positions)[:, None, None, :]
+    o = _latent_attention(p, x, cfg, positions, c_g, kr_g, mask)
     return apply_dense(p["wo"], o), cache

@@ -36,6 +36,11 @@ import numpy as np
 from repro.serve.scheduler import Request
 
 
+# write_start sentinel for idle lanes: no position ever reaches it, so the
+# paged step's masked scatter drops every idle-lane write.
+NEVER_WRITE = 1 << 30
+
+
 @dataclasses.dataclass
 class SlotState:
     """One admitted request bound to a cache row."""
@@ -46,13 +51,36 @@ class SlotState:
     target_len: int                   # len == done (prompt + max_new)
     pos: int = 0                      # next cache position to process
     stalled: bool = False             # pool couldn't grow this step
+    # Paged prefix sharing: cache writes at pos < write_start are
+    # suppressed — those positions live in blocks shared with the donor
+    # request and already hold bit-identical K/V.
+    write_start: int = 0
+    # Paged prefix registration bookkeeping (engine-owned).
+    registered_partial: bool = False
 
     @classmethod
-    def admit(cls, slot: int, request: Request) -> "SlotState":
+    def admit(cls, slot: int, request: Request,
+              shared_tokens: int = 0) -> "SlotState":
         forced = list(request.prompt) + list(request.resume_tokens)
+        # With `shared_tokens` prompt positions mapped from already-resident
+        # blocks, prefill skips to re-running only the last shared position
+        # (recovering its logits without re-writing its KV) — the pass at
+        # pos = shared_tokens - 1 behaves exactly as it would have in a
+        # from-scratch prefill, so the stream stays bit-exact.
+        shared = max(0, min(int(shared_tokens), len(forced)))
         return cls(slot=slot, request=request, tokens=list(forced),
                    prompt_len=len(forced),
-                   target_len=len(request.prompt) + request.max_new_tokens)
+                   target_len=len(request.prompt) + request.max_new_tokens,
+                   pos=max(0, shared - 1), write_start=shared)
+
+    @classmethod
+    def resume(cls, slot: int, request: Request, *, tokens: Sequence[int],
+               pos: int, prompt_len: int, target_len: int) -> "SlotState":
+        """Rebind a spill-preempted request: its pages were re-uploaded, so
+        decoding continues from the exact position it stopped at — no
+        teacher-forced recompute."""
+        return cls(slot=slot, request=request, tokens=list(tokens),
+                   prompt_len=prompt_len, target_len=target_len, pos=pos)
 
     @property
     def in_prefill(self) -> bool:
@@ -111,3 +139,36 @@ def assemble(slots: Sequence[SlotState], max_batch: int,
         tok[lane] = s.tokens[s.pos]
         pos[lane] = s.pos
     return idx, tok, pos, stepped
+
+
+def assemble_paged(slots: Sequence[SlotState], max_batch: int,
+                   scratch_slot: int, blocks_per_slot: int, blocks_of
+                   ) -> Optional[Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                       np.ndarray, np.ndarray,
+                                       List[SlotState]]]:
+    """The paged analogue of :func:`assemble`: adds the padded fixed-width
+    block-table array and the per-lane first writable position.
+
+    Returns ``(idx, table, tok, pos, write_start, stepped)`` — ``idx``
+    still points idle lanes at the scratch row (the *gather* of slot-major
+    recurrent rows must stay in bounds; the engine's scatter drops them),
+    ``table`` is (max_batch, blocks_per_slot) physical block ids padded
+    with 0 (idle lanes and positions past a request's grant are masked
+    reads / suppressed writes), and ``write_start`` is ``NEVER_WRITE`` on
+    idle lanes so the single masked page scatter drops them."""
+    stepped = [s for s in slots if not s.done and not s.stalled]
+    if not stepped:
+        return None
+    idx = np.full((max_batch,), scratch_slot, dtype=np.int32)
+    table = np.zeros((max_batch, blocks_per_slot), dtype=np.int32)
+    tok = np.zeros((max_batch,), dtype=np.int32)
+    pos = np.zeros((max_batch,), dtype=np.int32)
+    wstart = np.full((max_batch,), NEVER_WRITE, dtype=np.int32)
+    for lane, s in enumerate(stepped):
+        idx[lane] = s.slot
+        blocks = blocks_of(s)
+        table[lane, :len(blocks)] = blocks
+        tok[lane] = s.tokens[s.pos]
+        pos[lane] = s.pos
+        wstart[lane] = s.write_start
+    return idx, table, tok, pos, wstart, stepped

@@ -20,8 +20,10 @@ from repro import nn
 from repro.configs.base import ModelConfig
 from repro.models.lm import (_apply_mlp, _apply_norm, mla_config, moe_config,
                              ssm_config, window_schedule)
-from repro.nn.attention import NO_WINDOW
-from repro.nn.mla import apply_mla_decode, init_mla_cache
+from repro.nn.attention import (NO_WINDOW, masked_decode_attention,
+                                paged_decode_attention, paged_update_cache)
+from repro.nn.mla import (apply_mla_decode, apply_mla_paged_decode,
+                          init_mla_cache, init_paged_mla_cache)
 from repro.nn.ssm import apply_ssm_decode, init_ssm_cache
 
 _NEG = -1e30
@@ -81,6 +83,54 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int) -> List:
     return caches
 
 
+def paged_cache_kinds(cfg: ModelConfig) -> List[str]:
+    """Per-cache-entry layout under paging, parallel to the cache list:
+    ``"paged"`` — block-major physical pages addressed through the block
+    table (attention K/V, MLA latent); ``"slot"`` — per-slot rows gathered/
+    scattered by slot index (recurrent SSM/conv state has no sequence
+    dimension to page)."""
+    if cfg.family in ("dense", "moe"):
+        return ["paged"] * cfg.n_layers
+    if cfg.family == "ssm":
+        return ["slot"] * cfg.n_layers
+    if cfg.family == "hybrid":
+        return (["slot"] * cfg.n_layers
+                + ["paged"] * (cfg.n_layers // cfg.shared_attn_every))
+    raise ValueError(f"paged serving does not support family {cfg.family!r}")
+
+
+def _paged_attn_cache(cfg: ModelConfig, num_blocks: int,
+                      block_size: int) -> Dict:
+    shape = (num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, _cache_dtype(cfg)),
+            "v": jnp.zeros(shape, _cache_dtype(cfg))}
+
+
+def init_paged_caches(cfg: ModelConfig, num_blocks: int, block_size: int,
+                      num_slots: int) -> List:
+    """Block-major cache pytree for the paged serve path.
+
+    Attention/MLA entries hold ``num_blocks`` physical pages of
+    ``block_size`` positions shared by every request — memory scales with
+    the KV budget, not ``num_slots × max_seq``.  Windowed layers also
+    store absolute positions (their dense ring is reconstructed by a
+    trailing-window gather): they spend ``max_seq/window`` more bytes per
+    layer than the dense ring, the price of sharing and remapping pages.
+    Recurrent entries keep ``num_slots + 1`` per-slot rows (scratch row
+    included) exactly as the dense path does."""
+    caches: List = []
+    for kind in paged_cache_kinds(cfg):
+        if kind == "slot":
+            caches.append(init_ssm_cache(ssm_config(cfg), num_slots + 1,
+                                         _cache_dtype(cfg)))
+        elif cfg.family in ("dense", "moe") and cfg.mla:
+            caches.append(init_paged_mla_cache(mla_config(cfg), num_blocks,
+                                               block_size, _cache_dtype(cfg)))
+        else:
+            caches.append(_paged_attn_cache(cfg, num_blocks, block_size))
+    return caches
+
+
 # ---------------------------------------------------------------------------
 # per-layer decode attention
 # ---------------------------------------------------------------------------
@@ -91,13 +141,11 @@ def _positions(pos, batch: int) -> jax.Array:
     return pos[:, None] if pos.ndim >= 1 else jnp.full((batch, 1), pos)
 
 
-def _attn_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
-                 pos, window: int) -> Tuple[jax.Array, Dict]:
-    """x: (B, 1, d); ring buffer for local windows, absolute cache else.
-
-    ``pos`` is a scalar (all rows at the same position — static batch)
-    or a ``(B,)`` vector (ragged rows — continuous batching), in which
-    case the key mask becomes per-row ``(B, S)``."""
+def _project_qkv(cfg: ModelConfig, p: Dict, x: jax.Array,
+                 positions: jax.Array):
+    """The decode-step q/k/v projection (+qk-norm, +rope) — shared by the
+    dense slot path and the paged block-table path so both produce
+    bit-identical per-token K/V before the cache write."""
     from repro.nn.core import apply_dense
     B = x.shape[0]
     q = apply_dense(p["wq"], x).reshape(B, 1, cfg.n_heads, cfg.head_dim)
@@ -106,9 +154,21 @@ def _attn_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
     if cfg.qk_norm:
         q = nn.apply_rmsnorm(p["q_norm"], q)
         k = nn.apply_rmsnorm(p["k_norm"], k)
-    positions = _positions(pos, B)
     q = nn.apply_rope(q, positions, cfg.rope_theta)
     k = nn.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
+                 pos, window: int) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, d); ring buffer for local windows, absolute cache else.
+
+    ``pos`` is a scalar (all rows at the same position — static batch)
+    or a ``(B,)`` vector (ragged rows — continuous batching), in which
+    case the key mask becomes per-row ``(B, S)``."""
+    B = x.shape[0]
+    positions = _positions(pos, B)
+    q, k, v = _project_qkv(cfg, p, x, positions)
 
     ragged = jnp.asarray(pos).ndim >= 1
     S = cache["k"].shape[1]
@@ -141,22 +201,30 @@ def _attn_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
                                                 if kk not in ("k", "v")}}
 
 
-def _masked_decode_attn(q, k_cache, v_cache, mask):
-    """mask: (S,) shared across rows, or (B, S) per-row (ragged pos)."""
-    B, _, H, D = q.shape
-    S, KH = k_cache.shape[1], k_cache.shape[2]
-    G = H // KH
-    qf = q.astype(jnp.float32) * (D ** -0.5)
-    logits = jnp.einsum("bqhgd,bshd->bhgqs", qf.reshape(B, 1, KH, G, D),
-                        k_cache.astype(jnp.float32))
-    maskb = (mask[None, None, None, None] if mask.ndim == 1
-             else mask[:, None, None, None, :])
-    logits = jnp.where(maskb, logits, _NEG)
-    m = logits.max(axis=-1, keepdims=True)
-    p = jnp.exp(logits - m)
-    ell = p.sum(axis=-1, keepdims=True)
-    o = jnp.einsum("bhgqs,bshd->bhgqd", p, v_cache.astype(jnp.float32)) / ell
-    return o.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, D).astype(q.dtype)
+# The decode softmax now lives in nn.attention so the paged path shares it
+# op-for-op; kept under the historical local name for the call sites here.
+_masked_decode_attn = masked_decode_attention
+
+
+def _attn_decode_paged(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
+                       block_table: jax.Array, pos: jax.Array,
+                       window: int, max_seq: int,
+                       write_mask: jax.Array) -> Tuple[jax.Array, Dict]:
+    """The paged analogue of :func:`_attn_decode`: scatter this token's K/V
+    into the physical pages through the block table, then attend over a
+    gather whose width matches the dense layer's cache length — so the
+    outputs are bit-identical to the slot path's."""
+    B = x.shape[0]
+    positions = _positions(pos, B)
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    k_pages = paged_update_cache(cache["k"], k, block_table, pos,
+                                 write_mask=write_mask)
+    v_pages = paged_update_cache(cache["v"], v, block_table, pos,
+                                 write_mask=write_mask)
+    width = max_seq if window >= NO_WINDOW else min(window, max_seq)
+    o = paged_decode_attention(q, k_pages, v_pages, block_table, pos,
+                               window=window, width=width)
+    return nn.out_project(p, o), {"k": k_pages, "v": v_pages}
 
 
 # ---------------------------------------------------------------------------
@@ -248,6 +316,90 @@ def decode_step(params: Dict, caches: List, token: jax.Array, pos,
                                     jnp.ones((Se,), bool))
             x = x + nn.out_project(p["cross"], o)
             x = x + _apply_mlp(cfg, p["mlp"], _apply_norm(cfg, p["ln2"], x))
+    else:
+        raise ValueError(cfg.family)
+
+    x = _apply_norm(cfg, params["final_norm"], x)
+    logits = (nn.unembed(params["embed"], x) if cfg.tie_embeddings
+              else nn.apply_lm_head(params["lm_head"], x))
+    return logits[:, 0], new_caches
+
+
+def paged_decode_step(params: Dict, caches: List, block_table: jax.Array,
+                      token: jax.Array, pos: jax.Array,
+                      write_mask: jax.Array, cfg: ModelConfig, max_seq: int,
+                      mesh=None) -> Tuple[jax.Array, List]:
+    """token (B, 1) int32 -> logits (B, vocab) through the block table.
+
+    The paged analogue of :func:`decode_step`: ``"paged"`` cache entries
+    (see :func:`paged_cache_kinds`) are the full block-major page arrays —
+    every lane reads/writes its own pages through its ``block_table`` row
+    at its own ragged ``pos`` — while ``"slot"`` entries arrive already
+    gathered to (B, ...) rows (the engine scatters them back).
+    ``write_mask`` (B,) suppresses the page scatter for idle lanes and for
+    shared-prefix re-run passes whose target position is owned by a
+    shared block (the stored value is bit-identical, so skipping the
+    write avoids a spurious copy-on-write fork without changing any
+    attention operand)."""
+    x = nn.apply_embedding(params["embed"], token).astype(jnp.dtype(cfg.dtype))
+    if cfg.name.startswith("gemma"):
+        x = x * (cfg.d_model ** 0.5)   # gemma scales embeddings (as forward)
+    new_caches = list(caches)
+
+    if cfg.family in ("dense", "moe"):
+        wins = [int(w) for w in window_schedule(cfg)]
+        dense_head = cfg.first_dense_layers if cfg.family == "moe" else 0
+        for li in range(cfg.n_layers):
+            if cfg.family == "moe" and li >= dense_head:
+                p = _layer_params(params["layers"], li - dense_head)
+            elif cfg.family == "moe":
+                p = _layer_params(params["dense_layers"], li)
+            else:
+                p = _layer_params(params["layers"], li)
+            h = _apply_norm(cfg, p["ln1"], x)
+            if cfg.mla:
+                a, new_caches[li] = apply_mla_paged_decode(
+                    p["attn"], h, caches[li], block_table, pos,
+                    mla_config(cfg), width=max_seq, write_mask=write_mask)
+            else:
+                a, new_caches[li] = _attn_decode_paged(
+                    cfg, p["attn"], h, caches[li], block_table, pos,
+                    wins[li], max_seq, write_mask)
+            x = x + a
+            h = _apply_norm(cfg, p["ln2"], x)
+            if cfg.family == "moe" and li >= dense_head:
+                x = x + nn.apply_moe(p["moe"], h, moe_config(cfg), mesh=mesh)
+            else:
+                x = x + _apply_mlp(cfg, p["mlp"], h)
+
+    elif cfg.family == "ssm":
+        for li in range(cfg.n_layers):
+            p = _layer_params(params["layers"], li)
+            h = _apply_norm(cfg, p["ln1"], x)
+            y, new_caches[li] = apply_ssm_decode(p["ssm"], h, caches[li],
+                                                 ssm_config(cfg))
+            x = x + y
+
+    elif cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        shared = params["shared_block"]
+        g = 0
+        for li in range(cfg.n_layers):
+            p = _layer_params(params["layers"], li)
+            h = _apply_norm(cfg, p["ln1"], x)
+            y, new_caches[li] = apply_ssm_decode(p["ssm"], h, caches[li],
+                                                 ssm_config(cfg))
+            x = x + y
+            if (li + 1) % k == 0:
+                ci = cfg.n_layers + g
+                h = _apply_norm(cfg, shared["ln1"], x)
+                a, new_caches[ci] = _attn_decode_paged(
+                    cfg, shared["attn"], h, caches[ci], block_table, pos,
+                    NO_WINDOW, max_seq, write_mask)
+                x = x + a
+                x = x + _apply_mlp(cfg, shared["mlp"],
+                                   _apply_norm(cfg, shared["ln2"], x))
+                g += 1
     else:
         raise ValueError(cfg.family)
 

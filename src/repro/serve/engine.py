@@ -49,14 +49,17 @@ from repro.configs.base import ModelConfig
 from repro.dist import sharding as shd
 from repro.sched.cache import ScheduleCache
 from repro.sched.lowering import schedule_plan  # noqa: F401  (serve-facing API)
-from repro.serve.batching import SlotState, assemble
-from repro.serve.decode import decode_step, init_caches
+from repro.serve.batching import (NEVER_WRITE, SlotState, assemble,
+                                  assemble_paged)
+from repro.serve.decode import (decode_step, init_caches, init_paged_caches,
+                                paged_cache_kinds, paged_decode_step)
 from repro.serve.pool import KVBlockPool, PoolCapacityError, PoolError  # noqa: F401
 from repro.serve.scheduler import (DEFAULT_TENANT, FairScheduler, Request,
                                    Tenant)
 
-# One compiled (step, reset) pair per (config, mesh): engines in a sweep
-# share tracing/compilation instead of re-jitting per instance.
+# One compiled (step, reset) pair per (config, mesh[, paged geometry]):
+# engines in a sweep share tracing/compilation instead of re-jitting per
+# instance.
 _STEP_FNS: Dict = {}
 
 
@@ -69,13 +72,17 @@ def _step_fns(cfg: ModelConfig, mesh):
     if key not in _STEP_FNS:
         def step(params, caches, idx, tok, pos):
             # Gather the advancing rows, step them at their own positions,
-            # scatter back.  Duplicate scratch-lane writes are benign:
-            # identical inputs produce identical rows.
+            # scatter back.  Idle lanes (gathered from the scratch row) are
+            # routed to an out-of-range row and dropped — ONE masked
+            # scatter, no duplicate scratch-row writes to race under
+            # donated buffers.
             rows = jax.tree.map(lambda a: a[idx], caches)
             logits, new_rows = decode_step(params, rows, tok[:, None], pos,
                                            cfg, mesh=mesh)
+            scratch = jax.tree.leaves(caches)[0].shape[0] - 1
+            sidx = jnp.where(idx == scratch, scratch + 1, idx)
             caches = jax.tree.map(
-                lambda a, r: a.at[idx].set(r.astype(a.dtype)),
+                lambda a, r: a.at[sidx].set(r.astype(a.dtype), mode="drop"),
                 caches, new_rows)
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
 
@@ -87,6 +94,61 @@ def _step_fns(cfg: ModelConfig, mesh):
 
         _STEP_FNS[key] = (jax.jit(step), jax.jit(reset))
     return _STEP_FNS[key]
+
+
+def _paged_step_fns(cfg: ModelConfig, mesh, max_seq: int):
+    """(step, reset) for the paged path.  ``"paged"`` cache entries pass
+    through whole (lanes address them via the block table); ``"slot"``
+    entries (recurrent state) gather/scatter by slot exactly as the dense
+    path — with idle lanes dropped by the same out-of-range trick."""
+    key = (_cfg_key(cfg), None if mesh is None else id(mesh),
+           "paged", int(max_seq))
+    if key not in _STEP_FNS:
+        kinds = paged_cache_kinds(cfg)
+
+        def step(params, caches, idx, table, tok, pos, wstart):
+            write_mask = pos >= wstart
+            rows = [jax.tree.map(lambda a: a[idx], c) if kind == "slot"
+                    else c for c, kind in zip(caches, kinds)]
+            logits, new = paged_decode_step(params, rows, table, tok[:, None],
+                                            pos, write_mask, cfg, max_seq,
+                                            mesh=mesh)
+            out = []
+            for c, n, kind in zip(caches, new, kinds):
+                if kind == "slot":
+                    scratch = jax.tree.leaves(c)[0].shape[0] - 1
+                    sidx = jnp.where(idx == scratch, scratch + 1, idx)
+                    out.append(jax.tree.map(
+                        lambda a, r: a.at[sidx].set(r.astype(a.dtype),
+                                                    mode="drop"), c, n))
+                else:
+                    out.append(n)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), out
+
+        def reset(caches, idx):
+            # Only recurrent slot rows need zeroing on admission; page
+            # contents are never read unmasked before being written.
+            return [jax.tree.map(lambda a: a.at[idx].set(0), c)
+                    if kind == "slot" else c
+                    for c, kind in zip(caches, kinds)]
+
+        _STEP_FNS[key] = (jax.jit(step), jax.jit(reset))
+    return _STEP_FNS[key]
+
+
+@dataclasses.dataclass
+class _Spill:
+    """Host-side copy of a preempted request's KV pages (+ recurrent slot
+    rows) — the payload of copy-free preemption.  Travels on
+    ``Request.spill`` through the scheduler queue; re-admission allocates
+    ``n_blocks`` fresh blocks and uploads ``data`` into them, so decoding
+    resumes at ``pos`` bit-exactly with zero recompute."""
+    tokens: List[int]
+    pos: int
+    prompt_len: int
+    target_len: int
+    n_blocks: int
+    data: List
 
 
 class ServeEngine:
@@ -111,6 +173,8 @@ class ServeEngine:
                  tenants: Optional[Sequence[Tenant]] = None,
                  starvation_bound: int = 8, prefill_chunk: int = 4,
                  admission: str = "continuous",
+                 paged: bool = False, share_prefix: bool = True,
+                 debug_invariants: bool = False,
                  schedule_cache: Optional[Union[ScheduleCache, str]] = None,
                  on_missing: str = "baseline",
                  mesh=None, rng_seed: int = 0):
@@ -129,6 +193,13 @@ class ServeEngine:
         self.admission = admission
         self.prefill_chunk = int(prefill_chunk)
         self.mesh = mesh
+        self.paged = bool(paged)
+        self.debug_invariants = bool(debug_invariants)
+        # Prefix sharing needs the cache content at a position to be a pure
+        # function of the token prefix — true for attention/MLA pages,
+        # false for recurrent state (ssm/hybrid carry per-request rows).
+        self.share_prefix = (self.paged and bool(share_prefix)
+                             and cfg.family in ("dense", "moe"))
 
         self.pool = KVBlockPool(self.max_batch, self.max_seq,
                                 block_size=block_size, num_blocks=kv_blocks)
@@ -139,14 +210,26 @@ class ServeEngine:
             from repro.models import lm
             params = lm.init_model(cfg, jax.random.PRNGKey(rng_seed))
         self.params = params
-        self.caches = init_caches(cfg, self.max_batch + 1, self.max_seq)
+        if self.paged:
+            self._kinds = paged_cache_kinds(cfg)
+            self.caches = init_paged_caches(cfg, self.pool.num_blocks,
+                                            self.pool.block_size,
+                                            self.max_batch)
+        else:
+            self._kinds = None
+            self.caches = init_caches(cfg, self.max_batch + 1, self.max_seq)
         if mesh is not None:
             from repro.models import lm
             self.params = jax.device_put(
                 self.params, shd.param_shardings(lm.model_spec(cfg), mesh))
             self.caches = jax.device_put(
-                self.caches, shd.kv_pool_shardings(cfg, self.caches, mesh))
-        self._step_fn, self._reset_fn = _step_fns(cfg, mesh)
+                self.caches, shd.kv_pool_shardings(cfg, self.caches, mesh,
+                                                   kinds=self._kinds))
+        if self.paged:
+            self._step_fn, self._reset_fn = _paged_step_fns(cfg, mesh,
+                                                            self.max_seq)
+        else:
+            self._step_fn, self._reset_fn = _step_fns(cfg, mesh)
 
         if isinstance(schedule_cache, str):
             schedule_cache = ScheduleCache(schedule_cache)
@@ -166,7 +249,9 @@ class ServeEngine:
         self.finished: List[Request] = []
         self.counters = {"engine_steps": 0, "passes": 0, "lane_tokens": 0,
                          "admissions": 0, "stalls": 0, "preemptions": 0,
-                         "truncations": 0,
+                         "truncations": 0, "max_active": 0,
+                         "prefix_hits": 0, "cow_forks": 0,
+                         "preempt_spills": 0, "resume_uploads": 0,
                          "schedule_fallbacks": sum(
                              1 for art in self.plan.values() if art is None)}
 
@@ -214,6 +299,8 @@ class ServeEngine:
         lane occupancy and never stalls the running decodes."""
         self._evict()
         self._admit()
+        self.counters["max_active"] = max(self.counters["max_active"],
+                                          len(self._active))
         for s in self._active:
             s.stalled = False
         advanced = 0
@@ -227,6 +314,8 @@ class ServeEngine:
         if advanced == 0 and self._active:
             self._preempt_youngest()
         self.counters["engine_steps"] += 1
+        if self.debug_invariants:
+            self.pool.check()
         return advanced
 
     def run(self, max_steps: int = 1_000_000) -> List[Request]:
@@ -252,44 +341,105 @@ class ServeEngine:
 
     # -- internals -----------------------------------------------------------
 
+    def _admissible(self, req: Request) -> bool:
+        if not self.paged:
+            return self.pool.can_admit(
+                len(req.prompt) + len(req.resume_tokens))
+        if req.spill is not None:
+            # Re-granting just the spilled pages is not enough: the request
+            # must also be able to grow into its next write position, or a
+            # resume under pressure re-creates the stall that spilled it
+            # (resume → everyone blocked → preempt youngest → resume …).
+            return self.pool.can_resume(
+                self.pool.blocks_for(req.spill.pos + 1))
+        if self.share_prefix:
+            return self.pool.can_admit_shared(req.prompt)
+        return self.pool.can_admit(len(req.prompt))
+
     def _admit(self) -> None:
         if self.admission == "gang" and self._active:
             return           # static batching: wait for the gang to finish
         fresh: List[int] = []
+        resumed = []
         while len(self._active) < self.max_batch:
-            req = self.scheduler.admit_next(
-                predicate=lambda r: self.pool.can_admit(
-                    len(r.prompt) + len(r.resume_tokens)))
+            req = self.scheduler.admit_next(predicate=self._admissible)
             if req is None:
                 break
-            table = self.pool.alloc(req.id,
-                                    len(req.prompt) + len(req.resume_tokens))
-            self._active.append(SlotState.admit(table.slot, req))
+            if self.paged and req.spill is not None:
+                table = self.pool.alloc_resume(req.id, req.spill.n_blocks)
+                self._active.append(SlotState.resume(
+                    table.slot, req, tokens=req.spill.tokens,
+                    pos=req.spill.pos, prompt_len=req.spill.prompt_len,
+                    target_len=req.spill.target_len))
+                resumed.append((table, req.spill))
+                req.spill = None
+            elif self.paged and self.share_prefix:
+                table = self.pool.alloc_shared(req.id, req.prompt)
+                if table.shared_tokens:
+                    self.counters["prefix_hits"] += 1
+                self._active.append(SlotState.admit(
+                    table.slot, req, shared_tokens=table.shared_tokens))
+            elif self.paged:
+                table = self.pool.alloc(req.id, len(req.prompt))
+                self._active.append(SlotState.admit(table.slot, req))
+            else:
+                table = self.pool.alloc(
+                    req.id, len(req.prompt) + len(req.resume_tokens))
+                self._active.append(SlotState.admit(table.slot, req))
             fresh.append(table.slot)
             self.counters["admissions"] += 1
         if fresh:
             idx = np.full((self.max_batch,), self.scratch_slot, np.int32)
             idx[:len(fresh)] = fresh
             self.caches = self._reset_fn(self.caches, jnp.asarray(idx))
+        for table, spill in resumed:
+            self._upload_spill(table, spill)
+            self.counters["resume_uploads"] += 1
 
     def _pass(self) -> int:
         cand: List[SlotState] = []
+        forks: List = []
         for s in self._active:
             if s.done or s.stalled:
                 continue
-            if self.pool.can_ensure(s.request.id, s.needs_tokens()):
+            if self.paged:
+                write = s.pos >= s.write_start
+                if self.pool.can_advance(s.request.id, s.pos, write=write):
+                    pair = self.pool.advance(s.request.id, s.pos, write=write)
+                    if pair is not None:
+                        forks.append(pair)
+                    cand.append(s)
+                else:
+                    s.stalled = True
+                    self.counters["stalls"] += 1
+            elif self.pool.can_ensure(s.request.id, s.needs_tokens()):
                 self.pool.ensure(s.request.id, s.needs_tokens())
                 cand.append(s)
             else:
                 s.stalled = True
                 self.counters["stalls"] += 1
-        asm = assemble(cand, self.max_batch, self.scratch_slot)
-        if asm is None:
-            return 0
-        idx, tok, pos, stepped = asm
-        nxt, self.caches = self._step_fn(
-            self.params, self.caches, jnp.asarray(idx), jnp.asarray(tok),
-            jnp.asarray(pos))
+        if forks:
+            self._copy_blocks(forks)
+        if self.paged:
+            asm = assemble_paged(
+                cand, self.max_batch, self.scratch_slot,
+                self.pool.blocks_per_slot,
+                lambda s: self.pool.table(s.request.id).blocks)
+            if asm is None:
+                return 0
+            idx, table, tok, pos, wstart, stepped = asm
+            nxt, self.caches = self._step_fn(
+                self.params, self.caches, jnp.asarray(idx),
+                jnp.asarray(table), jnp.asarray(tok), jnp.asarray(pos),
+                jnp.asarray(wstart))
+        else:
+            asm = assemble(cand, self.max_batch, self.scratch_slot)
+            if asm is None:
+                return 0
+            idx, tok, pos, stepped = asm
+            nxt, self.caches = self._step_fn(
+                self.params, self.caches, jnp.asarray(idx), jnp.asarray(tok),
+                jnp.asarray(pos))
         nxt = np.asarray(nxt)
         now = time.monotonic()
         for lane, s in enumerate(stepped):
@@ -298,9 +448,51 @@ class ServeEngine:
                 s.request.first_token_time = now
             if s.request.truncated:
                 self.counters["truncations"] += 1
+            if self.share_prefix:
+                self.pool.commit(s.request.id, s.tokens, s.pos,
+                                 prompt_len=s.prompt_len)
         self.counters["passes"] += 1
         self.counters["lane_tokens"] += len(stepped)
         return len(stepped)
+
+    def _copy_blocks(self, forks: List) -> None:
+        """Apply copy-on-write forks: device-copy each ``src`` page onto
+        its ``dst`` before this pass writes into it."""
+        src = jnp.asarray([a for a, _ in forks])
+        dst = jnp.asarray([b for _, b in forks])
+        self.caches = [
+            jax.tree.map(lambda a: a.at[dst].set(a[src]), c)
+            if kind == "paged" else c
+            for c, kind in zip(self.caches, self._kinds)]
+        self.counters["cow_forks"] += len(forks)
+
+    def _spill(self, victim: SlotState) -> "_Spill":
+        """Copy the victim's pages (and recurrent slot rows) to host
+        memory so preemption frees its device blocks without losing the
+        computed KV — resume is a remap + upload, not a recompute."""
+        t = self.pool.table(victim.request.id)
+        ids = jnp.asarray(t.blocks)
+        data = []
+        for c, kind in zip(self.caches, self._kinds):
+            if kind == "paged":
+                data.append(jax.tree.map(lambda a: np.asarray(a[ids]), c))
+            else:
+                data.append(jax.tree.map(
+                    lambda a: np.asarray(a[victim.slot]), c))
+        return _Spill(tokens=list(victim.tokens), pos=victim.pos,
+                      prompt_len=victim.prompt_len,
+                      target_len=victim.target_len,
+                      n_blocks=t.num_blocks, data=data)
+
+    def _upload_spill(self, table, spill: "_Spill") -> None:
+        ids = jnp.asarray(table.blocks)
+        self.caches = [
+            jax.tree.map(lambda a, h: a.at[ids].set(jnp.asarray(h, a.dtype)),
+                         c, d)
+            if kind == "paged" else
+            jax.tree.map(lambda a, h: a.at[table.slot].set(
+                jnp.asarray(h, a.dtype)), c, d)
+            for c, d, kind in zip(self.caches, spill.data, self._kinds)]
 
     def _evict(self) -> None:
         done = [s for s in self._active if s.done]
@@ -320,9 +512,34 @@ class ServeEngine:
         victim = max(self._active,
                      key=lambda s: (s.request.submit_time, s.request.id))
         req = victim.request
+        generated = list(victim.generated)
+        if self.paged:
+            if self.pool.blocks_for(victim.pos + 1) > self.pool.num_blocks:
+                # It could never advance even owning the whole pool:
+                # finish it truncated rather than starve the queue.
+                self._active.remove(victim)
+                self.pool.free(req.id)
+                req.truncated = True
+                req.output = generated
+                req.finish_time = time.monotonic()
+                self.scheduler.release(req, served_tokens=len(generated))
+                self.finished.append(req)
+                self.counters["truncations"] += 1
+                return
+            # Copy-free preemption: spill the pages block-by-block, free
+            # the device blocks, resume later by remap + upload — no
+            # teacher-forced recompute of the prefill.
+            req.spill = self._spill(victim)
+            self._active.remove(victim)
+            self.pool.free(req.id)
+            req.preemptions += 1
+            self.scheduler.release(req, served_tokens=0)
+            self.scheduler.requeue_front(req)
+            self.counters["preemptions"] += 1
+            self.counters["preempt_spills"] += 1
+            return
         self._active.remove(victim)
         self.pool.free(req.id)
-        generated = list(victim.generated)
         if len(req.prompt) + len(generated) >= self.max_seq:
             # Resuming would need the whole cache for teacher-forcing:
             # finish it truncated rather than starve the queue.
@@ -345,11 +562,38 @@ class ServeEngine:
     def active(self) -> int:
         return len(self._active)
 
+    def kv_bytes_allocated(self) -> int:
+        """Device bytes backing the KV cache pytree.  Paged mode scales
+        with ``kv_blocks × block_size``; dense mode with
+        ``(max_batch + 1) × max_seq`` regardless of occupancy — the
+        memory-proportionality win the paged layout exists for."""
+        return int(sum(leaf.size * jnp.dtype(leaf.dtype).itemsize
+                       for leaf in jax.tree.leaves(self.caches)))
+
+    def peak_kv_bytes(self) -> int:
+        """High-water KV footprint actually addressed: paged mode scales
+        the page bytes by the pool's high-water block count; dense mode
+        pins the full allocation from construction."""
+        if not self.paged:
+            return self.kv_bytes_allocated()
+        paged_bytes = slot_bytes = 0
+        for c, kind in zip(self.caches, self._kinds):
+            n = sum(leaf.size * jnp.dtype(leaf.dtype).itemsize
+                    for leaf in jax.tree.leaves(c))
+            if kind == "paged":
+                paged_bytes += n
+            else:
+                slot_bytes += n
+        frac = self.pool.high_water_blocks / max(1, self.pool.num_blocks)
+        return int(paged_bytes * frac + slot_bytes)
+
     def stats(self) -> Dict[str, object]:
         c = dict(self.counters)
         c["lane_utilization"] = (
             c["lane_tokens"] / (c["passes"] * self.max_batch)
             if c["passes"] else 0.0)
+        c["kv_bytes_allocated"] = self.kv_bytes_allocated()
+        c["peak_kv_bytes"] = self.peak_kv_bytes()
         return {"engine": c, "pool": self.pool.stats(),
                 "tenants": self.scheduler.fairness_table()}
 

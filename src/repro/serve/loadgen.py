@@ -28,7 +28,16 @@ from repro.serve.scheduler import Request
 @dataclasses.dataclass(frozen=True)
 class TrafficConfig:
     """One synthetic workload: Poisson arrivals at ``qps`` with uniform
-    prompt/output length mixes over ``n_tenants`` round-robin tenants."""
+    prompt/output length mixes over ``n_tenants`` round-robin tenants.
+
+    With ``prefix_tokens > 0`` every prompt starts with one of
+    ``prefix_groups`` shared system-prompt prefixes, chosen per request
+    from a Zipf-like distribution (group ``g`` has weight
+    ``1 / (g + 1) ** prefix_zipf``) — the hot group dominates, which is
+    what makes paged prefix sharing pay off.  Prefix material comes from
+    a *separate* rng stream seeded from ``seed``, so a config with
+    ``prefix_tokens=0`` replays token-for-token the same trace it did
+    before this knob existed."""
     qps: float = 8.0
     n_requests: int = 32
     n_tenants: int = 2
@@ -36,10 +45,15 @@ class TrafficConfig:
     output_len: tuple = (4, 24)
     vocab: int = 256
     seed: int = 0
+    prefix_tokens: int = 0               # shared prefix length (0 = off)
+    prefix_groups: int = 4               # distinct shared prefixes
+    prefix_zipf: float = 1.5             # group popularity skew
 
     def __post_init__(self):
         if self.qps <= 0 or self.n_requests < 1 or self.n_tenants < 1:
             raise ValueError("need qps > 0, n_requests >= 1, n_tenants >= 1")
+        if self.prefix_tokens < 0 or self.prefix_groups < 1:
+            raise ValueError("need prefix_tokens >= 0, prefix_groups >= 1")
 
 
 @dataclasses.dataclass
@@ -57,6 +71,18 @@ def poisson_trace(traffic: TrafficConfig,
     rng = np.random.default_rng(traffic.seed)
     names = (list(tenant_names) if tenant_names is not None
              else [f"t{i}" for i in range(traffic.n_tenants)])
+    prefixes: List[List[int]] = []
+    groups = None
+    if traffic.prefix_tokens:
+        # Separate stream: adding/removing the prefix knob must not
+        # perturb the base trace (arrival gaps, lengths, suffix tokens).
+        prng = np.random.default_rng((traffic.seed, 0x5E1F))
+        prefixes = [prng.integers(0, traffic.vocab, size=traffic.prefix_tokens,
+                                  dtype=np.int32).tolist()
+                    for _ in range(traffic.prefix_groups)]
+        w = 1.0 / (np.arange(traffic.prefix_groups) + 1.0) ** traffic.prefix_zipf
+        groups = prng.choice(traffic.prefix_groups,
+                             size=traffic.n_requests, p=w / w.sum())
     arrivals, t = [], 0.0
     for i in range(traffic.n_requests):
         t += float(rng.exponential(1.0 / traffic.qps))
@@ -66,6 +92,8 @@ def poisson_trace(traffic: TrafficConfig,
                                 traffic.output_len[1] + 1))
         prompt = rng.integers(0, traffic.vocab, size=plen,
                               dtype=np.int32).tolist()
+        if prefixes:
+            prompt = prefixes[int(groups[i])] + prompt
         arrivals.append(Arrival(at=t, tenant=names[i % len(names)],
                                 prompt=prompt, max_new_tokens=olen))
     return arrivals

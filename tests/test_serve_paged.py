@@ -1,0 +1,334 @@
+"""Paged KV serving: physical block-pool pages behind per-request block
+tables.  Covers bit-exactness of the paged decode path vs the static
+``generate()`` reference (dense/windowed/SSM/MLA families), copy-free
+spill preemption-resume, hash-based prefix sharing with copy-on-write,
+the block-geometry edge cases (block_size=1, max_seq not a multiple of
+the block size, prompts ending exactly on a block boundary), pool
+invariants under churn, and the zero-measurement guarantee on the paged
+hot path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve import (KVBlockPool, ServeEngine, TrafficConfig, generate,
+                         poisson_trace)
+
+MAX_SEQ = 48
+
+
+def _model(arch):
+    cfg = get_config(arch, reduced=True)
+    return cfg, lm.init_model(cfg, jax.random.PRNGKey(0))
+
+
+def _refs(params, cfg, prompts, n, max_seq=MAX_SEQ):
+    """Batched static-path reference (equal lengths -> one compile)."""
+    out = generate(params, cfg, jnp.asarray(prompts, jnp.int32), n,
+                   max_seq=max_seq)
+    return [row.tolist() for row in np.asarray(out)]
+
+
+def _ref_one(params, cfg, prompt, n, max_seq=MAX_SEQ):
+    out = generate(params, cfg, np.asarray(prompt, np.int32)[None], n,
+                   max_seq=max_seq)
+    return np.asarray(out)[0, len(prompt):].tolist()
+
+
+# ---------------------------------------------------------------------------
+# paged == dense == generate(), across cache families
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen1.5-4b", "gemma3-1b", "mamba2-1.3b"])
+def test_paged_bitexact_vs_sequential_generate(arch):
+    """The block-table indirection must not change a single logit:
+    per-request streams under paged continuous batching (staggered
+    arrivals, slot churn) match the one-request-at-a-time static path.
+    Covers absolute caches (qwen), ring-buffer windows re-expressed as
+    trailing page windows (gemma), and slot-major recurrent state riding
+    next to paged attention leaves (mamba)."""
+    cfg, params = _model(arch)
+    engine = ServeEngine.from_config(cfg, params=params, max_batch=3,
+                                     max_seq=MAX_SEQ, block_size=8,
+                                     prefill_chunk=2, paged=True,
+                                     debug_invariants=True)
+    rng = np.random.default_rng(0)
+    jobs = []
+    for _ in range(4):
+        plen, n = int(rng.integers(3, 14)), int(rng.integers(2, 10))
+        jobs.append((rng.integers(0, cfg.vocab, plen,
+                                  dtype=np.int32).tolist(), n))
+    reqs = [engine.submit(p, n) for p, n in jobs[:2]]
+    for _ in range(3):
+        engine.step()
+    reqs += [engine.submit(p, n) for p, n in jobs[2:]]
+    engine.run()
+    for req, (prompt, n) in zip(reqs, jobs):
+        assert req.output == _ref_one(params, cfg, prompt, n), \
+            f"request {req.id} diverged under paged decode"
+        assert len(req.output) == n and not req.truncated
+    assert engine.pool.stats()["free_blocks"] == engine.pool.num_blocks
+    engine.pool.check()
+
+
+def test_paged_mla_decode_bitexact():
+    """The MLA paged path (latent c_kv + shared k_rope pages) matches the
+    dense MLA decode stream."""
+    cfg, params = _model("deepseek-v2-lite-16b")
+    engine = ServeEngine.from_config(cfg, params=params, max_batch=2,
+                                     max_seq=32, block_size=8, paged=True,
+                                     debug_invariants=True)
+    jobs = [([1, 2, 3, 4, 5], 6), ([9, 8, 7], 5)]
+    reqs = [engine.submit(p, n) for p, n in jobs]
+    engine.run()
+    for req, (prompt, n) in zip(reqs, jobs):
+        assert req.output == _ref_one(params, cfg, prompt, n, max_seq=32)
+
+
+# ---------------------------------------------------------------------------
+# copy-free preemption: spill to host, resume by remap
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen1.5-4b", "mamba2-1.3b"])
+def test_spill_preemption_resumes_bitexact_without_recompute(arch):
+    """With the pool oversubscribed, stalled victims are spilled —
+    their pages copied to host and blocks freed — and later resumed by
+    re-uploading into fresh blocks.  Streams stay bit-exact and no
+    request is ever teacher-force recomputed (``resume_tokens`` stays
+    empty; that is the dense path's preemption)."""
+    cfg, params = _model(arch)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, 12).tolist() for _ in range(3)]
+    refs = _refs(params, cfg, prompts, 20)
+    engine = ServeEngine.from_config(cfg, params=params, max_batch=4,
+                                     max_seq=MAX_SEQ, block_size=8,
+                                     kv_blocks=6, paged=True,
+                                     share_prefix=False,
+                                     debug_invariants=True)
+    reqs = [engine.submit(p, 20) for p in prompts]
+    engine.run(max_steps=5000)
+    assert engine.counters["preempt_spills"] > 0, "pool never pressured"
+    assert engine.counters["resume_uploads"] > 0
+    for req, ref in zip(reqs, refs):
+        assert list(req.prompt) + list(req.output) == ref
+        assert not req.truncated
+        assert not req.resume_tokens, "spill resume must not recompute"
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing + copy-on-write
+# ---------------------------------------------------------------------------
+
+def test_prefix_sharing_cow_under_concurrent_decode():
+    """A resident request's prompt blocks (including the partial tail
+    block, registered under the whole-prompt key) are shared by later
+    identical/prefix-matching admissions; the sharer's first private
+    write copy-on-write-forks the shared partial block, and all three
+    concurrent streams stay bit-exact."""
+    cfg, params = _model("qwen1.5-4b")
+    engine = ServeEngine.from_config(cfg, params=params, max_batch=3,
+                                     max_seq=MAX_SEQ, block_size=8,
+                                     paged=True, debug_invariants=True)
+    rng = np.random.default_rng(7)
+    base = rng.integers(0, cfg.vocab, 10).tolist()     # 1 full + partial
+    tail = rng.integers(0, cfg.vocab, 3).tolist()
+    a = engine.submit(base, 8)
+    for _ in range(6):                    # A prefills + starts decoding
+        engine.step()
+    assert a.first_token_time is not None
+    b = engine.submit(base, 8)            # identical prompt: shares 10
+    c = engine.submit(base[:8] + tail, 8)  # shares the full block only
+    engine.run()
+
+    assert engine.counters["prefix_hits"] == 2
+    stats = engine.pool.stats()
+    assert stats["shared_tokens_reused"] == 10 + 8
+    assert engine.counters["cow_forks"] >= 1, \
+        "B's first private write must fork the shared partial block"
+    for req, prompt in ((a, base), (b, base), (c, base[:8] + tail)):
+        assert req.output == _ref_one(params, cfg, prompt, 8), \
+            f"request {req.id} diverged under prefix sharing"
+    assert engine.pool.stats()["free_blocks"] == engine.pool.num_blocks
+    engine.pool.check()
+
+
+def test_shared_prefix_trace_generator_is_seeded_and_layered():
+    """loadgen: ``prefix_tokens`` draws from a separate rng stream, so
+    the base trace (arrivals, lengths, suffixes) replays token-for-token
+    identically with the knob on or off, and the Zipf group choice
+    concentrates reuse on the hottest prefix."""
+    base = poisson_trace(TrafficConfig(seed=7, n_requests=16))
+    pref = poisson_trace(TrafficConfig(seed=7, n_requests=16,
+                                       prefix_tokens=16, prefix_groups=4))
+    assert [a.at for a in base] == [a.at for a in pref]
+    assert all(p.prompt[16:] == b.prompt
+               and p.max_new_tokens == b.max_new_tokens
+               for b, p in zip(base, pref))
+    heads = [tuple(a.prompt[:16]) for a in pref]
+    assert len(set(heads)) <= 4
+    hottest = max(set(heads), key=heads.count)
+    assert heads.count(hottest) >= len(heads) / 4    # Zipf skew
+    again = poisson_trace(TrafficConfig(seed=7, n_requests=16,
+                                        prefix_tokens=16, prefix_groups=4))
+    assert [a.prompt for a in again] == [a.prompt for a in pref]
+
+
+# ---------------------------------------------------------------------------
+# block-geometry edges
+# ---------------------------------------------------------------------------
+
+def test_block_size_one():
+    """One token per page: every advance grows the table by one block."""
+    cfg, params = _model("qwen1.5-4b")
+    engine = ServeEngine.from_config(cfg, params=params, max_batch=2,
+                                     max_seq=24, block_size=1, paged=True,
+                                     debug_invariants=True)
+    jobs = [([3, 1, 4, 1, 5], 6), ([2, 7], 5)]
+    reqs = [engine.submit(p, n) for p, n in jobs]
+    engine.run()
+    for req, (prompt, n) in zip(reqs, jobs):
+        assert req.output == _ref_one(params, cfg, prompt, n, max_seq=24)
+    assert engine.pool.stats()["free_blocks"] == engine.pool.num_blocks
+
+
+def test_max_seq_not_multiple_of_block_size():
+    """max_seq=42 over 8-token blocks: the last block is only partially
+    addressable; truncation still lands exactly at max_seq."""
+    cfg, params = _model("qwen1.5-4b")
+    engine = ServeEngine.from_config(cfg, params=params, max_batch=2,
+                                     max_seq=42, block_size=8, paged=True,
+                                     debug_invariants=True)
+    req = engine.submit([5, 4, 3, 2, 1, 0], 60)        # must truncate
+    engine.run()
+    assert req.truncated
+    # every cache position 0..41 is written; the final emitted token
+    # rides without a cache slot, so the stream is max_seq + 1 long
+    assert len(req.prompt) + len(req.output) == 43
+    ref = _ref_one(params, cfg, [5, 4, 3, 2, 1, 0], 60, max_seq=42)
+    assert req.output == ref[:len(req.output)]
+
+
+def test_prompt_exactly_fills_last_block():
+    """A 16-token prompt at block_size=8 ends on a block boundary: the
+    first generated token's write opens a fresh block, and when the
+    whole prompt is full blocks the partial-tail registration is a
+    no-op (everything shareable is already keyed)."""
+    cfg, params = _model("qwen1.5-4b")
+    engine = ServeEngine.from_config(cfg, params=params, max_batch=2,
+                                     max_seq=MAX_SEQ, block_size=8,
+                                     paged=True, debug_invariants=True)
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab, 16).tolist()
+    a = engine.submit(prompt, 6)
+    for _ in range(8):
+        engine.step()
+    assert a.first_token_time is not None
+    b = engine.submit(prompt, 6)          # shares both full prompt blocks
+    engine.run()
+    assert engine.counters["prefix_hits"] == 1
+    assert engine.pool.stats()["shared_tokens_reused"] == 16
+    for req in (a, b):
+        assert req.output == _ref_one(params, cfg, prompt, 6)
+
+
+# ---------------------------------------------------------------------------
+# pool-level invariants under churn
+# ---------------------------------------------------------------------------
+
+def test_paged_pool_invariants_under_shared_churn():
+    """Seeded alloc_shared/advance/commit/free churn with overlapping
+    prompts: refcounts, registry keys, and block accounting hold after
+    every operation (``check()`` raises on any violation)."""
+    rng = np.random.default_rng(13)
+    pool = KVBlockPool(num_blocks=24, block_size=4, max_seq=32,
+                       num_slots=6)
+    prompts = {}
+    live = {}
+    next_id = 0
+    for _ in range(300):
+        op = rng.choice(["admit", "advance", "free"])
+        if op == "admit" and len(live) < 6:
+            plen = int(rng.integers(2, 12))
+            if rng.random() < 0.5 and prompts:
+                donor = prompts[int(rng.choice(list(prompts)))]
+                prompt = (donor + [int(x) for x in
+                                   rng.integers(0, 50, 2)])[:plen] \
+                    if plen > len(donor) else donor[:plen]
+            else:
+                prompt = [int(x) for x in rng.integers(0, 50, plen)]
+            if pool.can_admit_shared(prompt):
+                t = pool.alloc_shared(next_id, prompt)
+                live[next_id] = [len(prompt), prompt]
+                prompts[next_id] = prompt
+                next_id += 1
+        elif op == "advance" and live:
+            rid = int(rng.choice(list(live)))
+            pos, prompt = live[rid]
+            if pos < 32 and pool.can_advance(rid, pos, write=True):
+                pool.advance(rid, pos, write=True)
+                tokens = prompt + [int(x) for x in
+                                   rng.integers(0, 50, pos + 1)]
+                pool.commit(rid, tokens[:pos + 1], pos,
+                            prompt_len=len(prompt))
+                live[rid][0] = pos + 1
+        elif op == "free" and live:
+            rid = int(rng.choice(list(live)))
+            pool.free(rid)
+            del live[rid], prompts[rid]
+        pool.check()
+    for rid in list(live):
+        pool.free(rid)
+    pool.check()
+    assert pool.stats()["free_blocks"] == pool.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# zero-measurement paged hot path
+# ---------------------------------------------------------------------------
+
+def test_paged_serve_hot_path_zero_measurements(tmp_path, stall_db,
+                                                monkeypatch):
+    """The paged engine keeps the serve-path guarantee: schedules are
+    index lookups — zero ``Machine.run``/``Machine.time``/autotune calls
+    while serving (prefix sharing and spills included)."""
+    import sys
+
+    from repro.core import Machine
+    from repro.sched import OptimizationSession, make_budgeted_strategy
+    from repro.sched.cache import ScheduleCache
+    from repro.sched.session import OptimizeRequest
+
+    session = OptimizationSession(
+        strategy=make_budgeted_strategy("greedy", timesteps=64,
+                                        episode_length=8),
+        cache_dir=str(tmp_path / "cache"), stall_db=stall_db,
+        verify_seeds=2)
+    session.optimize(OptimizeRequest(kernel="rmsnorm"))
+
+    calls = {"run": 0, "time": 0, "autotune": 0}
+    real_run, real_time = Machine.run, Machine.time
+    autotune_mod = sys.modules["repro.sched.autotune"]
+
+    def counting(name, fn):
+        def wrapper(*a, **kw):
+            calls[name] += 1
+            return fn(*a, **kw)
+        return wrapper
+
+    monkeypatch.setattr(Machine, "run", counting("run", real_run))
+    monkeypatch.setattr(Machine, "time", counting("time", real_time))
+    monkeypatch.setattr(autotune_mod, "autotune",
+                        counting("autotune", autotune_mod.autotune))
+
+    cfg, params = _model("qwen1.5-4b")
+    engine = ServeEngine.from_config(
+        cfg, params=params, max_batch=2, max_seq=32, block_size=8,
+        paged=True, debug_invariants=True,
+        schedule_cache=ScheduleCache(str(tmp_path / "cache")))
+    engine.submit([1, 2, 3, 4], 4)
+    engine.submit([1, 2, 3, 4], 4)       # shares the admission prefix
+    engine.run()
+    assert calls == {"run": 0, "time": 0, "autotune": 0}
